@@ -1,0 +1,134 @@
+"""Paper-figure benchmarks (Figs. 6-9) over the WAN simulator.
+
+Each function returns a list of CSV rows (name, us_per_call, derived) where
+us_per_call is the median request latency in microseconds and derived packs
+protocol/rate/throughput. Simulations are scaled from the paper's 60 s runs
+to a few seconds (5x5 deployment unchanged); EXPERIMENTS.md compares against
+the paper's headline numbers.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.configs.smr import PAPER_CLAIMS, SMRConfig
+from repro.core.harness import run_sim
+from repro.core.netsim import FaultSchedule
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+Row = Tuple[str, float, str]
+
+
+def _row(name: str, med_ms: float, **derived) -> Row:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    return (name, med_ms * 1000.0, d)
+
+
+def fig6_throughput_latency(sim_seconds: float = 4.0) -> List[Row]:
+    """Best-case WAN performance, 5 replicas (Fig. 6)."""
+    cfg = SMRConfig(sim_seconds=sim_seconds)
+    sweeps = {
+        "mandator-sporades": [50_000, 150_000, 300_000, 450_000],
+        "mandator-paxos": [50_000, 150_000, 300_000, 450_000],
+        "multipaxos": [10_000, 30_000, 50_000, 100_000],
+        "epaxos": [2_000, 5_000, 10_000, 20_000],
+        "rabia": [200, 500, 1_000, 2_000],
+    }
+    rows: List[Row] = []
+    results = {}
+    for proto, rates in sweeps.items():
+        best = 0.0
+        for rate in rates:
+            r = run_sim(proto, cfg, rate_tx_s=rate)
+            rows.append(_row(f"fig6/{proto}@{rate}", r["median_ms"],
+                             tput=round(r["throughput"]),
+                             p99_ms=round(r["p99_ms"], 1)))
+            # saturation throughput under the paper's ~1s (5s DDoS) bound
+            if r["median_ms"] < 1_000 and r["throughput"] > best:
+                best = r["throughput"]
+        results[proto] = best
+    (ART / "fig6.json").write_text(json.dumps(results, indent=1))
+    return rows
+
+
+def fig7_crash(sim_seconds: float = 4.0) -> List[Row]:
+    """Leader crash mid-run (Fig. 7): throughput timeline."""
+    cfg = SMRConfig(sim_seconds=sim_seconds)
+    crash = np.full(5, np.inf)
+    crash[0] = sim_seconds / 2          # leader of view 0
+    rows: List[Row] = []
+    out = {}
+    for proto in ("mandator-sporades", "mandator-paxos"):
+        r = run_sim(proto, cfg, rate_tx_s=100_000,
+                    faults=FaultSchedule(crash_time_s=crash))
+        tl = [round(x) for x in r["timeline"]]
+        out[proto] = tl
+        post = np.asarray(r["timeline"])[-2:]
+        rows.append(_row(f"fig7/{proto}", r["median_ms"],
+                         tput=round(r["throughput"]),
+                         recovered=int(post.max() > 0),
+                         timeline="|".join(map(str, tl))))
+    (ART / "fig7.json").write_text(json.dumps(out, indent=1))
+    return rows
+
+
+def fig8_ddos(sim_seconds: float = 4.0) -> List[Row]:
+    """Targeted-minority DDoS (Fig. 8)."""
+    cfg = SMRConfig(sim_seconds=sim_seconds)
+    faults = FaultSchedule(ddos=True, ddos_repick_s=1.0)
+    rows: List[Row] = []
+    out = {}
+    for proto, rate in (("mandator-sporades", 300_000),
+                        ("mandator-paxos", 300_000),
+                        ("multipaxos", 50_000),
+                        ("epaxos", 10_000)):
+        if proto == "epaxos":
+            # analytic baseline: DDoS modeled as doubled effective RTTs
+            r = run_sim(proto, cfg, rate_tx_s=rate)
+            r["throughput"] *= 0.5
+            r["median_ms"] *= 2.0
+        else:
+            r = run_sim(proto, cfg, rate_tx_s=rate, faults=faults)
+        out[proto] = {"tput": r["throughput"], "med_ms": r["median_ms"]}
+        rows.append(_row(f"fig8/{proto}", r["median_ms"],
+                         tput=round(r["throughput"])))
+    (ART / "fig8.json").write_text(json.dumps(out, indent=1))
+    return rows
+
+
+def fig9_scalability(sim_seconds: float = 3.0) -> List[Row]:
+    """3 -> 9 replicas, Mandator-Sporades (Fig. 9)."""
+    rows: List[Row] = []
+    out = {}
+    for n in (3, 5, 7, 9):
+        cfg = SMRConfig(n_replicas=n, sim_seconds=sim_seconds)
+        r = run_sim("mandator-sporades", cfg, rate_tx_s=60_000 * n)
+        out[n] = {"tput": r["throughput"], "med_ms": r["median_ms"]}
+        rows.append(_row(f"fig9/n={n}", r["median_ms"],
+                         tput=round(r["throughput"])))
+    (ART / "fig9.json").write_text(json.dumps(out, indent=1))
+    return rows
+
+
+def paper_comparison() -> List[Row]:
+    """Summarize sim-vs-paper headline numbers (fills EXPERIMENTS.md)."""
+    rows: List[Row] = []
+    f6 = json.loads((ART / "fig6.json").read_text()) \
+        if (ART / "fig6.json").exists() else {}
+    claims = {
+        "mandator-sporades": PAPER_CLAIMS["mandator_sporades_tput"],
+        "mandator-paxos": PAPER_CLAIMS["mandator_paxos_tput"],
+        "multipaxos": PAPER_CLAIMS["multipaxos_tput"],
+        "epaxos": PAPER_CLAIMS["epaxos_tput"],
+        "rabia": PAPER_CLAIMS["rabia_tput"],
+    }
+    for proto, claim in claims.items():
+        ours = f6.get(proto, 0.0)
+        rows.append(_row(f"paper/{proto}", 0.0, sim_tput=round(ours),
+                         paper_tput=claim,
+                         ratio=round(ours / claim, 2) if claim else 0))
+    return rows

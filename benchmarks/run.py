@@ -1,0 +1,55 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``.
+"""Benchmark driver:
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6,roofline,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import figures  # noqa: E402
+from benchmarks import roofline  # noqa: E402
+from benchmarks.bench_kernels import bench as kernel_bench  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter sims (2s instead of 4s)")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    sim_s = 2.0 if args.quick else 4.0
+    only = set(args.only.split(",")) if args.only else None
+
+    figures.ART.mkdir(parents=True, exist_ok=True)
+    rows = []
+    suites = {
+        "fig6": lambda: figures.fig6_throughput_latency(sim_s),
+        "fig7": lambda: figures.fig7_crash(sim_s),
+        "fig8": lambda: figures.fig8_ddos(sim_s),
+        "fig9": lambda: figures.fig9_scalability(max(sim_s - 1, 2.0)),
+        "paper": figures.paper_comparison,
+        "kernels": kernel_bench,
+        "roofline_single": lambda: roofline.rows("single"),
+        "roofline_multi": lambda: roofline.rows("multi"),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+        print(f"# {name} done in {time.time() - t0:.0f}s", file=sys.stderr)
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: train a reduced SmolLM on CPU, checkpoint, resume, decode.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as d:
+        print("== train (reduced smollm-135m) ==")
+        out = train("smollm-135m", steps=60, batch=8, seq=32,
+                    ckpt_dir=d, ckpt_every=30, lr=2e-3, log_every=15)
+        print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+        assert out["losses"][-1] < out["losses"][0]
+        print("== resume from checkpoint ==")
+        train("smollm-135m", steps=80, batch=8, seq=32,
+              ckpt_dir=d, ckpt_every=40, lr=2e-3, log_every=10)
+    print("== decode ==")
+    serve("smollm-135m", batch=2, prompt_len=8, gen=16)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving across modalities: decoder LM (qwen3), audio-token
+decoder (musicgen stub frontend), and a VLM with cross-attention memory.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    for arch in ("qwen3-14b", "musicgen-medium", "llama-3.2-vision-11b"):
+        serve(arch, batch=2, prompt_len=8, gen=12)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — Mandator & Sporades as a multi-pod JAX training/serving framework."""
+
+__version__ = "1.0.0"

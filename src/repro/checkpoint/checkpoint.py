@@ -1,0 +1,119 @@
+"""Sharded checkpointing with Mandator-style asynchronous commit.
+
+Data plane: each controller streams its parameter/optimizer shards to
+storage *ahead of* any commit decision (write(B) of Algorithm 1 — shard
+round files are the Mandator-batches). Control plane: a checkpoint version
+is a **vector-clock cut** over controller shard rounds; the tiny
+``commit-<v>.json`` manifest is written only once a quorum of shard writes
+is durable (n-f votes). Restore picks the highest committed cut — torn
+checkpoints (some shards newer) are impossible by construction, which is
+exactly Mandator's availability property applied to storage.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in leaves_p:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        leaves.append(arr.astype(leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class MandatorCheckpointer:
+    """n_controllers shard-writers + quorum commit. In production each
+    controller is one pod's host fleet; here they are invoked in-process
+    (the protocol logic is identical — see runtime/sporades_rt.py for the
+    fallback path when controllers fail)."""
+
+    def __init__(self, root: str | Path, n_controllers: int = 1):
+        self.root = Path(root)
+        self.n = n_controllers
+        self.f = (n_controllers - 1) // 2
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # ---- data plane -------------------------------------------------------
+    def write_shard(self, controller: int, version: int,
+                    tree: Any, tag: str = "state") -> bool:
+        """One controller's shard write (Mandator write(B)). Returns ack."""
+        d = self.root / f"c{controller}" / f"v{version}"
+        d.mkdir(parents=True, exist_ok=True)
+        flat = _flatten(tree)
+        np.savez(d / f"{tag}.npz", **flat)
+        (d / f"{tag}.ok").write_text(str(time.time()))
+        return True
+
+    # ---- control plane ----------------------------------------------------
+    def try_commit(self, version: int, step: int,
+                   acks: Optional[List[bool]] = None) -> bool:
+        """Commit the cut if >= n-f controller shards are durable."""
+        present = []
+        for c in range(self.n):
+            ok = (self.root / f"c{c}" / f"v{version}" / "state.ok").exists()
+            if acks is not None:
+                ok = ok and acks[c]
+            present.append(ok)
+        if sum(present) < self.n - self.f:
+            return False
+        manifest = {"version": version, "step": step,
+                    "controllers": [c for c, p in enumerate(present) if p],
+                    "time": time.time()}
+        (self.root / f"commit-{version}.json").write_text(
+            json.dumps(manifest))
+        return True
+
+    def latest_committed(self) -> Optional[Dict]:
+        best = None
+        for p in self.root.glob("commit-*.json"):
+            m = json.loads(p.read_text())
+            if best is None or m["version"] > best["version"]:
+                best = m
+        return best
+
+    def restore(self, template: Any, controller: int = 0,
+                tag: str = "state") -> Optional[Tuple[int, Any]]:
+        m = self.latest_committed()
+        if m is None:
+            return None
+        src = controller if controller in m["controllers"] \
+            else m["controllers"][0]
+        d = self.root / f"c{src}" / f"v{m['version']}"
+        flat = dict(np.load(d / f"{tag}.npz"))
+        return m["step"], _unflatten(template, flat)
+
+
+def save(path: str | Path, step: int, params: Any, opt_state: Any) -> None:
+    """Single-writer convenience wrapper (quickstart / tests)."""
+    ck = MandatorCheckpointer(path, 1)
+    ck.write_shard(0, step, {"params": params, "opt": opt_state})
+    ck.try_commit(step, step)
+
+
+def restore(path: str | Path, params_tmpl: Any, opt_tmpl: Any
+            ) -> Optional[Tuple[int, Any, Any]]:
+    ck = MandatorCheckpointer(path, 1)
+    out = ck.restore({"params": params_tmpl, "opt": opt_tmpl})
+    if out is None:
+        return None
+    step, tree = out
+    return step, tree["params"], tree["opt"]

@@ -1,0 +1,69 @@
+"""Delayed-delivery message channels for the tick-based WAN simulator.
+
+A channel is a ring buffer ``[Dmax, n, n, P]`` of payload vectors plus a
+presence flag ``[Dmax, n, n]``; sender i's message to j written at arrival
+slot ``(t + delay_ij) % Dmax``. All protocol payloads are designed to be
+*monotone* (elementwise-max mergeable) — colliding deliveries merge into
+the later state, which an omission-fault-tolerant protocol tolerates by
+construction (DESIGN.md §8). The receive side folds arrivals into a
+"latest state" matrix with elementwise max.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1.0  # "absent" payload fill
+
+
+def make_channel(dmax: int, n: int, p: int, additive: bool = False
+                 ) -> Dict[str, jax.Array]:
+    fill = 0.0 if additive else NEG
+    return {
+        "buf": jnp.full((dmax, n, n, p), fill, jnp.float32),
+        "flag": jnp.zeros((dmax, n, n), jnp.bool_),
+        "fill": jnp.float32(fill),
+    }
+
+
+def send(ch: Dict[str, jax.Array], t: jax.Array, payload: jax.Array,
+         delay_ticks: jax.Array, mask: jax.Array, additive: bool = False
+         ) -> Dict[str, jax.Array]:
+    """payload: [n, n, P] (sender, receiver, fields); delay_ticks: [n, n]
+    int32 >= 1; mask: [n, n] bool — which (i, j) actually send this tick.
+    Merging policy: elementwise max (monotone payloads) or add (counters)."""
+    dmax = ch["buf"].shape[0]
+    n = payload.shape[0]
+    slot = (t + jnp.clip(delay_ticks, 1, dmax - 1)) % dmax          # [n, n]
+    ii, jj = jnp.meshgrid(jnp.arange(n), jnp.arange(n), indexing="ij")
+    if additive:
+        merged = jnp.where(mask[..., None], payload, 0.0)
+        buf = ch["buf"].at[slot, ii, jj].add(merged)
+    else:
+        merged = jnp.where(mask[..., None], payload, NEG)
+        buf = ch["buf"].at[slot, ii, jj].max(merged)
+    flag = ch["flag"].at[slot, ii, jj].max(mask)
+    return {"buf": buf, "flag": flag, "fill": ch["fill"]}
+
+
+def deliver(ch: Dict[str, jax.Array], t: jax.Array
+            ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """Pop slot t. Returns (channel, flags [n,n], payload [n,n,P])."""
+    dmax = ch["buf"].shape[0]
+    slot = t % dmax
+    flags = ch["flag"][slot]
+    payload = ch["buf"][slot]
+    buf = ch["buf"].at[slot].set(ch["fill"])
+    flag = ch["flag"].at[slot].set(False)
+    return {"buf": buf, "flag": flag, "fill": ch["fill"]}, flags, payload
+
+
+def fold_state(state: jax.Array, flags: jax.Array, payload: jax.Array
+               ) -> jax.Array:
+    """Merge arrivals into latest-state matrix [n, n, P] (receiver, sender)."""
+    # payload is (sender, receiver, P) -> transpose to (receiver, sender, P)
+    arr = jnp.swapaxes(payload, 0, 1)
+    fl = jnp.swapaxes(flags, 0, 1)[..., None]
+    return jnp.where(fl, jnp.maximum(state, arr), state)

@@ -1,0 +1,26 @@
+"""Common-coin-flip(v) — the paper's §3.2.1 primitive, Rabia-style.
+
+Every replica holds the same (shared-secret) seed; common_coin_flip(v)
+derives the view-v leader with a PRNG keyed by (seed, v). Properties
+(§3.2.1): (1) same output at every replica for the same v; (2) independent
+across views. Implemented with jax.random so the training runtime
+(runtime/sporades_rt.py) and the WAN sim share the exact primitive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def common_coin_flip(v: jax.Array | int, n: int, seed: int = 0) -> jax.Array:
+    """Deterministic uniform int in [0, n) for view v."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), jnp.asarray(v, jnp.uint32))
+    return jax.random.randint(key, (), 0, n)
+
+
+def coin_table(max_views: int, n: int, seed: int = 0) -> jax.Array:
+    """Pre-generated coins for views [0, max_views) — the paper's
+    'pre-generate random numbers for each view number' implementation."""
+    keys = jax.vmap(lambda v: jax.random.fold_in(jax.random.PRNGKey(seed), v))(
+        jnp.arange(max_views, dtype=jnp.uint32))
+    return jax.vmap(lambda k: jax.random.randint(k, (), 0, n))(keys)

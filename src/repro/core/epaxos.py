@@ -1,0 +1,88 @@
+"""EPaxos baseline — analytic model (documented simplification, DESIGN.md §8).
+
+Why a model: the paper itself explains EPaxos's WAN collapse via the revised
+EPaxos study (NSDI'21 [45]): with batching, request batches conflict almost
+surely, forcing (a) the slow path (second round) and (b) *execution* to wait
+for dependency batches from other replicas' instances. We model:
+
+- per-replica sequential instances (no pipelining, §5.2), batch 1000;
+- commit latency = fast-quorum RTT + P_slow * majority RTT, with
+  P_slow = 1 - (1 - p_conflict)^min(batch, 100);
+- execution: global dependency order — executing instance k requires
+  learning the previous conflicting instance's commit from its (remote)
+  command leader, costing one average one-way delay per link in the chain:
+  exec_k = max(commit_k + d_max(origin), exec_{k-1} + d_avg).
+
+The d_avg serial term is the "infinitely growing dependency chains" effect:
+when commits outpace 1/d_avg, execution latency diverges — reproducing the
+~6.5k tx/s @ <=720ms saturation the paper measures.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.smr import SMRConfig
+from repro.core.netsim import FaultSchedule
+
+
+def run_epaxos_model(cfg: SMRConfig, rate_tx_s: float,
+                     faults: FaultSchedule) -> Dict:
+    n = cfg.n_replicas
+    d = cfg.delays_ms()                      # one-way ms
+    off = d + np.where(np.eye(n, dtype=bool), np.inf, 0)
+    rtt = 2 * d
+    fast_q = n // 2 + 1                      # thrifty fast quorum incl self
+    # per-replica commit duration for one instance
+    sorted_rtt = np.sort(np.where(np.eye(n, dtype=bool), np.inf, rtt), axis=1)
+    fast_rtt = sorted_rtt[:, fast_q - 2]     # slowest of the needed remote acks
+    maj_rtt = sorted_rtt[:, n // 2]
+    p_slow = 1.0 - (1.0 - cfg.epaxos_conflict_rate) ** min(cfg.batch_epaxos, 100)
+    slot_ms = fast_rtt + p_slow * maj_rtt
+    d_avg = float(np.mean(np.where(np.isfinite(off), off, 0))
+                  * n / (n - 1))             # mean off-diagonal one-way
+    d_max = np.max(d, axis=1)
+
+    sim_ms = cfg.sim_seconds * 1000.0
+    lam = rate_tx_s / n / 1000.0             # req per ms per replica
+    batch = cfg.batch_epaxos
+    # generate instance streams
+    events = []                              # (create_ms, origin, count)
+    for i in range(n):
+        t, nxt = 0.0, 0.0
+        while t < sim_ms:
+            fill_ms = batch / max(lam, 1e-9)
+            start = max(t, nxt)
+            create = start + min(fill_ms, cfg.max_batch_ms / 1 + batch / max(lam, 1e-9))
+            commit = create + slot_ms[i]
+            events.append((create, commit, i, min(batch, lam * max(fill_ms, cfg.max_batch_ms))))
+            nxt = commit                     # sequential instances
+            t = create
+    events.sort(key=lambda e: e[1])
+    exec_prev = 0.0
+    lat, wt = [], []
+    committed = 0.0
+    for create, commit, i, cnt in events:
+        e = max(commit + d_max[i], exec_prev + p_slow * d_avg)
+        exec_prev = e
+        if e < sim_ms:
+            committed += cnt
+            lat.append(e - create + batch / max(lam, 1e-9) / 2)
+            wt.append(cnt)
+    lat, wt = np.array(lat), np.array(wt)
+    order = np.argsort(lat) if len(lat) else np.array([], int)
+    med = p99 = float("nan")
+    if len(lat):
+        cum = np.cumsum(wt[order]) / wt.sum()
+        med = float(lat[order][np.searchsorted(cum, 0.5)])
+        p99 = float(lat[order][min(np.searchsorted(cum, 0.99), len(lat) - 1)])
+    nbuck = int(np.ceil(sim_ms / 500.0))
+    timeline = np.zeros(nbuck)
+    for create, commit, i, cnt in events:
+        if commit < sim_ms:
+            timeline[int(commit // 500)] += cnt
+    return {"protocol": "epaxos", "rate": rate_tx_s,
+            "throughput": committed / (sim_ms / 1000.0),
+            "median_ms": med, "p99_ms": p99, "committed": committed,
+            "timeline": timeline / 0.5}

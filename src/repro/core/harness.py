@@ -1,0 +1,178 @@
+"""SMR simulation harness: drives a protocol over the WAN sim and produces
+the paper's metrics (throughput, median/p99 execution latency, timelines).
+
+Protocols:
+  mandator-sporades  — Alg 1 + Algs 2/3 (full tick-level state machines)
+  mandator-paxos     — Alg 1 + Multi-Paxos ordering the vector clock
+  multipaxos         — monolithic Multi-Paxos (batches inside consensus)
+  mandator           — dissemination layer alone (completion throughput)
+  epaxos / rabia     — analytic baselines (see docstrings in epaxos.py/rabia.py)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.smr import SMRConfig
+from repro.core import mandator, netsim, paxos, sporades
+from repro.core.netsim import FaultSchedule
+
+
+@partial(jax.jit, static_argnames=("protocol", "cfg", "n_ticks"))
+def _run_scan(protocol: str, cfg: SMRConfig, n_ticks: int,
+              rate_per_tick: jax.Array, env: Dict, seed: int = 0):
+    uses_mandator = protocol in ("mandator-sporades", "mandator-paxos",
+                                 "mandator")
+    st = {}
+    if uses_mandator:
+        st["m"] = mandator.init_state(cfg, n_ticks)
+    if protocol == "mandator-sporades":
+        st["s"] = sporades.init_state(cfg, n_ticks)
+    if protocol in ("mandator-paxos", "multipaxos"):
+        st["p"] = paxos.init_state(cfg, n_ticks,
+                                   mandator_mode=(protocol == "mandator-paxos"))
+    base_key = jax.random.PRNGKey(seed)
+
+    def step(carry, t):
+        key = jax.random.fold_in(base_key, t)
+        out = {}
+        if uses_mandator:
+            carry = dict(carry)
+            carry["m"] = mandator.tick(carry["m"], t, key, env, cfg,
+                                       rate_per_tick)
+            lcr = mandator.get_client_requests(carry["m"])
+            out["own_round"] = carry["m"]["own_round"]
+        if protocol == "mandator-sporades":
+            carry["s"] = sporades.tick(carry["s"], t, env, cfg, lcr)
+            out["cvc"] = jnp.max(carry["s"]["cvc"], axis=0)
+            out["cvc_all"] = carry["s"]["cvc"]
+            out["commit_key"] = carry["s"]["commit_key"]
+            out["is_async"] = carry["s"]["is_async"]
+            out["v_cur"] = carry["s"]["v_cur"]
+        elif protocol == "mandator-paxos":
+            carry["p"] = paxos.tick(carry["p"], t, key, env, cfg,
+                                    rate_per_tick, True, lcr=lcr)
+            out["cvc"] = jnp.max(carry["p"]["cvc"], axis=0)
+        elif protocol == "multipaxos":
+            carry = dict(carry)
+            carry["p"] = paxos.tick(carry["p"], t, key, env, cfg,
+                                    rate_per_tick, False)
+            out["committed_slot"] = carry["p"]["committed_slot"]
+        return carry, out
+
+    st, trace = jax.lax.scan(step, st, jnp.arange(n_ticks, dtype=jnp.int32))
+    return st, trace
+
+
+def _weighted_quantile(vals: np.ndarray, weights: np.ndarray, q: float) -> float:
+    if len(vals) == 0 or weights.sum() <= 0:
+        return float("nan")
+    order = np.argsort(vals)
+    v, w = vals[order], weights[order]
+    cum = np.cumsum(w) / w.sum()
+    return float(v[np.searchsorted(cum, q, side="left").clip(0, len(v) - 1)])
+
+
+def _batch_metrics(cfg: SMRConfig, create_t, arr_mean, count, commit_t,
+                   warmup_frac=0.15, bucket_ms=500.0) -> Dict:
+    """Post-hoc metrics over batch records (ticks -> ms via cfg.tick_ms)."""
+    n_ticks = int(cfg.sim_seconds * 1000 / cfg.tick_ms)
+    ok = np.isfinite(commit_t) & (count > 0) & np.isfinite(create_t)
+    lat_ms = (commit_t - arr_mean) * cfg.tick_ms
+    w0 = warmup_frac * n_ticks
+    in_win = ok & (commit_t >= w0)
+    win_s = (n_ticks - w0) * cfg.tick_ms / 1000.0
+    tput = float(count[in_win].sum() / win_s) if win_s > 0 else 0.0
+    med = _weighted_quantile(lat_ms[in_win], count[in_win], 0.5)
+    p99 = _weighted_quantile(lat_ms[in_win], count[in_win], 0.99)
+    nbuck = int(np.ceil(n_ticks * cfg.tick_ms / bucket_ms))
+    timeline = np.zeros(nbuck)
+    b = (commit_t[ok] * cfg.tick_ms / bucket_ms).astype(int).clip(0, nbuck - 1)
+    np.add.at(timeline, b, count[ok])
+    timeline /= bucket_ms / 1000.0
+    return {"throughput": tput, "median_ms": med, "p99_ms": p99,
+            "timeline": timeline, "committed": float(count[ok].sum())}
+
+
+def _vc_commit_ticks(cvc_trace: np.ndarray, n: int, r_max: int) -> np.ndarray:
+    """cvc_trace: [ticks, n] monotone. commit tick of batch (k, r) for
+    r in 1..r_max -> [n, r_max] (inf if never)."""
+    out = np.full((n, r_max), np.inf)
+    for k in range(n):
+        col = cvc_trace[:, k]
+        rs = np.arange(1, r_max + 1)
+        idx = np.searchsorted(col, rs, side="left")
+        valid = idx < len(col)
+        out[k, valid] = idx[valid]
+    return out
+
+
+def run_sim(protocol: str, cfg: SMRConfig, rate_tx_s: float,
+            faults: Optional[FaultSchedule] = None, seed: int = 0) -> Dict:
+    faults = faults or FaultSchedule()
+    env = netsim.build_env(cfg, faults)
+    n_ticks = env["n_ticks"]
+    n = cfg.n_replicas
+    rate_per_tick = jnp.float32(rate_tx_s * cfg.tick_ms / 1000.0 / n)
+
+    if protocol == "epaxos":
+        from repro.core.epaxos import run_epaxos_model
+        return run_epaxos_model(cfg, rate_tx_s, faults)
+    if protocol == "rabia":
+        from repro.core.rabia import run_rabia_model
+        return run_rabia_model(cfg, rate_tx_s, faults)
+
+    st, trace = _run_scan(protocol, cfg, int(n_ticks), rate_per_tick, env,
+                          seed)
+    trace = jax.tree.map(np.asarray, trace)
+    result: Dict = {"protocol": protocol, "rate": rate_tx_s}
+
+    if protocol == "mandator":
+        # dissemination completion = "commit" for availability accounting
+        wl = jax.tree.map(np.asarray, st["m"]["wl"])
+        cvc = trace["own_round"]                       # [ticks, n]
+        commit_ticks = _vc_commit_ticks(cvc, n, wl["batch_count"].shape[1])
+        result.update(_batch_metrics(
+            cfg, np.asarray(wl["batch_create_t"]),
+            np.asarray(wl["batch_arr_mean"]),
+            np.asarray(wl["batch_count"]),
+            np.concatenate([np.full((n, 1), np.inf), commit_ticks], axis=1)[
+                :, :wl["batch_count"].shape[1]]))
+        return result
+
+    if protocol in ("mandator-sporades", "mandator-paxos"):
+        wl = jax.tree.map(np.asarray, st["m"]["wl"])
+        cvc = trace["cvc"]                             # [ticks, n]
+        commit_ticks = _vc_commit_ticks(cvc, n, wl["batch_count"].shape[1])
+        # batch r commits with VC >= r; index r-1 in arrays is round r? --
+        # rounds are 1-based; array column r holds round r (col 0 unused).
+        result.update(_batch_metrics(
+            cfg, np.asarray(wl["batch_create_t"]),
+            np.asarray(wl["batch_arr_mean"]),
+            np.asarray(wl["batch_count"]),
+            np.concatenate([np.full((n, 1), np.inf), commit_ticks], axis=1)[
+                :, :wl["batch_count"].shape[1]]))
+        if protocol == "mandator-sporades":
+            result["async_frac"] = float(trace["is_async"].mean())
+            result["views"] = int(trace["v_cur"].max())
+            result["cvc_all"] = trace["cvc_all"]
+            result["commit_key"] = trace["commit_key"]
+        return result
+
+    if protocol == "multipaxos":
+        wl = jax.tree.map(np.asarray, st["p"]["wl"])
+        cs = trace["committed_slot"]                   # [ticks, n] per leader
+        commit_ticks = _vc_commit_ticks(cs, n, wl["batch_count"].shape[1])
+        result.update(_batch_metrics(
+            cfg, np.asarray(wl["batch_create_t"]),
+            np.asarray(wl["batch_arr_mean"]),
+            np.asarray(wl["batch_count"]),
+            np.concatenate([np.full((n, 1), np.inf), commit_ticks], axis=1)[
+                :, :wl["batch_count"].shape[1]]))
+        return result
+
+    raise ValueError(protocol)

@@ -1,0 +1,114 @@
+"""Mandator (Algorithm 1) — consensus-agnostic asynchronous request
+dissemination, faithful to the paper:
+
+- every replica runs its own chain of Mandator-batches,
+- a batch is broadcast, voted, and *completed* once n-f <Mandator-vote>s
+  arrive; the next batch (carrying lastCompletedRounds implicitly through
+  its parent link) is only formed after completion (awaitingAcks gate),
+- getClientRequests() returns the replica's lastCompletedRounds[] vector
+  clock — the only thing the consensus layer ever orders.
+
+Simulator mapping: <new-Mandator-batch> and <Mandator-vote> are monotone
+payloads (round numbers), so channel merges are benign (channel.py).
+Implementation §4 notes: child processes and selective-broadcast change
+constants (hop count / memory), not the algorithm; we model the 1-child
+configuration's bandwidth on the replica NIC directly (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.smr import SMRConfig
+from repro.core import channel as ch
+from repro.core import netsim, workload
+
+DMAX = 4096
+
+
+def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
+    n = cfg.n_replicas
+    return {
+        "wl": workload.init_workload(cfg, n_ticks),
+        "own_round": jnp.zeros((n,), jnp.int32),       # last completed round
+        "formed_round": jnp.zeros((n,), jnp.int32),    # last formed round
+        "lcr": jnp.zeros((n, n), jnp.int32),           # i's lastCompletedRounds
+        "seen_round": jnp.zeros((n, n), jnp.int32),    # i's max batch seen from j
+        "vote_max": jnp.zeros((n, n), jnp.int32),      # votes i received from j
+        "batch_ch": ch.make_channel(DMAX, n, 2),   # (round, lastCompleted)
+        "vote_ch": ch.make_channel(DMAX, n, 1),
+        "egress_busy": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
+         rate_per_tick: jax.Array) -> Dict:
+    n = cfg.n_replicas
+    f = (n - 1) // 2
+    quorum = n - f
+    alive = netsim.alive(env, t)
+    delays = netsim.link_delay(env, t)
+    st = dict(st)
+
+    # 1) client arrivals + cpu refill
+    wl = workload.arrive(st["wl"], key, t, rate_per_tick, alive)
+    wl = workload.refill_cpu(wl, env["cpu_req_per_tick"])
+
+    # 2) deliver <new-Mandator-batch>: update seen rounds + lcr, send votes
+    batch_ch, bflags, bpayload = ch.deliver(st["batch_ch"], t)
+    folded = ch.fold_state(
+        jnp.stack([st["seen_round"], st["lcr"]], axis=-1).astype(jnp.float32),
+        bflags, bpayload)
+    seen = folded[..., 0].astype(jnp.int32)
+    # batch carries its creator's lastCompletedRounds (parent link, line 15)
+    lcr = folded[..., 1].astype(jnp.int32)
+    # vote for every newly seen batch (line 16): cumulative vote = max round
+    vote_mask = jnp.swapaxes(bflags, 0, 1) & alive[:, None]   # [voter, owner]
+    vote_payload = seen.astype(jnp.float32)[..., None]        # [n, n, 1]
+    vote_ch = ch.send(st["vote_ch"], t, vote_payload,
+                      delays.astype(jnp.int32), vote_mask)
+
+    # 3) deliver votes; in-order completion check (lines 17-19); with lanes,
+    #    several rounds may complete back-to-back in one tick
+    vote_ch, vflags, vpayload = ch.deliver(vote_ch, t)
+    vote_max = ch.fold_state(st["vote_max"].astype(jnp.float32)[..., None],
+                             vflags, vpayload)[..., 0].astype(jnp.int32)
+    own_round = st["own_round"]
+    for _ in range(cfg.mandator_lanes):
+        await_round = own_round + 1
+        votes = jnp.sum(vote_max >= await_round[:, None], axis=1)
+        done = (st["formed_round"] >= await_round) & (votes >= quorum)
+        own_round = jnp.where(done, await_round, own_round)
+    lcr = lcr.at[jnp.arange(n), jnp.arange(n)].set(own_round)
+
+    # 4) form + broadcast next batch (lines 8-12); §4 child processes allow
+    #    up to `mandator_lanes` outstanding batches per chain
+    can_form = alive & (st["formed_round"] - own_round < cfg.mandator_lanes)
+    wl, formed, count = workload.form_batches(
+        wl, t, can_form, st["formed_round"] + 1, cfg.batch_mandator,
+        cfg.max_batch_ms / cfg.tick_ms)
+    formed_round = jnp.where(formed, st["formed_round"] + 1, st["formed_round"])
+    # child processes serialize on their own NIC share; we model the replica
+    # NIC as the shared egress (DESIGN.md §8)
+    bytes_out = (count * cfg.request_bytes + 100.0)[:, None] * formed[:, None]
+    bytes_out = jnp.broadcast_to(bytes_out, (n, n)) / env["bytes_per_tick"]
+    busy, ser_delay = netsim.egress_delay(st["egress_busy"], t, bytes_out)
+    busy = jnp.where(formed, busy, st["egress_busy"])
+    total_delay = (delays + jnp.where(formed[:, None], ser_delay, 0.0)
+                   ).astype(jnp.int32)
+    bpay = jnp.stack([formed_round, own_round], axis=-1).astype(
+        jnp.float32)[:, None, :] * jnp.ones((n, n, 1))
+    batch_ch = ch.send(batch_ch, t, bpay, total_delay,
+                       formed[:, None] & jnp.ones((n, n), jnp.bool_))
+
+    st.update(wl=wl, own_round=own_round, formed_round=formed_round, lcr=lcr,
+              seen_round=seen, vote_max=vote_max, batch_ch=batch_ch,
+              vote_ch=vote_ch, egress_busy=busy)
+    return st
+
+
+def get_client_requests(st: Dict) -> jax.Array:
+    """lastCompletedRounds — the consensus payload (line 20-21). [n, n]."""
+    return st["lcr"]

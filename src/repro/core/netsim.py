@@ -1,0 +1,86 @@
+"""WAN network environment: per-pair delays, NIC egress serialization,
+crash faults, and targeted-minority DDoS (the §5.5 generalized
+delayed-view-change attack).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.smr import SMRConfig
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """crash_time_s[i] — replica i stops at that time (inf = never).
+    ddos: if enabled, every ``repick_s`` seconds a random minority set is
+    attacked; their links gain ``attack_delay_ms`` each way."""
+    crash_time_s: Optional[np.ndarray] = None
+    ddos: bool = False
+    ddos_attack_delay_ms: float = 800.0
+    ddos_repick_s: float = 2.0
+    ddos_seed: int = 7
+
+
+def build_env(cfg: SMRConfig, faults: FaultSchedule) -> Dict[str, jnp.ndarray]:
+    n = cfg.n_replicas
+    delays = jnp.asarray(cfg.delays_ms() / cfg.tick_ms)        # [n,n] ticks
+    crash = (jnp.full((n,), jnp.inf) if faults.crash_time_s is None
+             else jnp.asarray(faults.crash_time_s * 1000.0 / cfg.tick_ms))
+    ticks = int(cfg.sim_seconds * 1000 / cfg.tick_ms)
+    if faults.ddos:
+        # pre-generate the attacked minority per repick window
+        rng = np.random.RandomState(faults.ddos_seed)
+        f = (n - 1) // 2
+        n_windows = int(np.ceil(cfg.sim_seconds / faults.ddos_repick_s)) + 1
+        att = np.zeros((n_windows, n), np.bool_)
+        for w in range(n_windows):
+            att[w, rng.choice(n, size=f, replace=False)] = True
+        attacked = jnp.asarray(att)
+    else:
+        attacked = jnp.zeros((1, n), jnp.bool_)
+    return {
+        "delays": delays,
+        "crash_tick": crash,
+        "attacked": attacked,
+        "ddos_delay": jnp.float32(
+            faults.ddos_attack_delay_ms / cfg.tick_ms if faults.ddos else 0.0),
+        "repick_ticks": jnp.int32(max(1, int(
+            faults.ddos_repick_s * 1000 / cfg.tick_ms))),
+        "n_ticks": ticks,
+        "bytes_per_tick": jnp.float32(
+            cfg.nic_gbps * 1e9 / 8.0 * cfg.tick_ms / 1000.0),
+        "cpu_req_per_tick": jnp.float32(
+            cfg.tick_ms * 1000.0 / cfg.cpu_us_per_request),
+    }
+
+
+def alive(env, t) -> jax.Array:
+    """[n] bool — replica has not crashed."""
+    return t < env["crash_tick"]
+
+
+def link_delay(env, t) -> jax.Array:
+    """[n, n] delay in ticks including DDoS extra delay on attacked nodes."""
+    w = jnp.minimum(t // env["repick_ticks"], env["attacked"].shape[0] - 1)
+    att = env["attacked"][w]                                   # [n]
+    extra = (att[:, None] | att[None, :]) * env["ddos_delay"]
+    return env["delays"] + extra
+
+
+def egress_delay(busy: jax.Array, t: jax.Array, bytes_out: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """NIC serialization. busy: [n] abs tick when NIC frees; bytes_out: [n,n]
+    bytes sent this tick (serialized in receiver order). Returns
+    (new_busy [n], extra_delay_ticks [n,n])."""
+    # cumulative serialization time per receiver j (order: j ascending)
+    # NOTE: env['bytes_per_tick'] is folded in by the caller.
+    cum = jnp.cumsum(bytes_out, axis=1)
+    start = jnp.maximum(busy, t.astype(jnp.float32))[:, None]
+    finish = start + cum
+    new_busy = start[:, 0] + cum[:, -1]
+    return new_busy, finish - t.astype(jnp.float32)

@@ -1,0 +1,180 @@
+"""Multi-Paxos baseline (§5's monolithic leader-based protocol) and its
+Mandator composition (Mandator-Paxos).
+
+Plain mode: clients forward requests to the current leader; the leader runs
+one consensus slot at a time (no pipelining, §5.2) carrying the request
+batch *in* the accept message (the monolithic anti-pattern the paper
+targets) — throughput is bound by batch/slot-RTT and the leader's NIC.
+
+Mandator mode: the slot payload is the leader's lastCompletedRounds vector
+clock (meta_bytes), committing every disseminated batch it dominates.
+
+View change: follower timeout -> view++ (rotating leader); a new leader
+runs phase-1 (modeled as one majority-RTT delay) before proposing. Requests
+forwarded to a failed leader are lost to the count (client-retry is not
+modeled; noted in DESIGN.md §8) — the crash-dip in fig7 is the phenomenon
+under study.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.smr import SMRConfig
+from repro.core import channel as ch
+from repro.core import netsim, workload
+
+DMAX = 4096
+
+
+def _phase1_ticks(cfg: SMRConfig) -> jnp.ndarray:
+    """Majority RTT per prospective leader (modeled phase-1 cost)."""
+    d = cfg.delays_ms() / cfg.tick_ms
+    n = cfg.n_replicas
+    maj = n // 2 + 1
+    rtts = np.sort(2 * d, axis=1)[:, maj - 1]
+    return jnp.asarray(rtts, jnp.float32)
+
+
+def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool) -> Dict:
+    n = cfg.n_replicas
+    return {
+        "wl": workload.init_workload(cfg, n_ticks),
+        "view": jnp.zeros((n,), jnp.int32),
+        "last_heard": jnp.zeros((n,), jnp.float32),
+        "ready_at": jnp.zeros((n,), jnp.float32),
+        "slot": jnp.zeros((n,), jnp.int32),           # leader's last started
+        "outstanding": jnp.zeros((n,), jnp.bool_),
+        "acks": jnp.zeros((n, n), jnp.int32),         # max slot acked by j
+        "committed_slot": jnp.zeros((n,), jnp.int32),
+        "cvc": jnp.zeros((n, n), jnp.int32),          # mandator mode commit VC
+        "slot_vc": jnp.zeros((n, 1 + n), jnp.float32),  # outstanding slot payload
+        "fw_ch": ch.make_channel(DMAX, n, 2, additive=True),  # (count, tsum)
+        "acc_ch": ch.make_channel(DMAX, n, 3 + n),    # (view, slot, ., vc)
+        "ack_ch": ch.make_channel(DMAX, n, 1),
+        "egress_busy": jnp.zeros((n,), jnp.float32),
+        "phase1": _phase1_ticks(cfg),
+    }
+
+
+def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
+         rate_per_tick: jax.Array, mandator_mode: bool,
+         lcr: jax.Array | None = None) -> Dict:
+    n = cfg.n_replicas
+    maj = n // 2 + 1
+    alive = netsim.alive(env, t)
+    delays = netsim.link_delay(env, t).astype(jnp.int32)
+    to_ticks = jnp.float32(cfg.view_timeout_ms / cfg.tick_ms)
+    tf = t.astype(jnp.float32)
+    st = dict(st)
+    rows = jnp.arange(n)
+
+    view = st["view"]
+    leader = view % n
+    i_am_leader = (leader == rows) & alive
+
+    wl = workload.refill_cpu(st["wl"], env["cpu_req_per_tick"])
+
+    # ---- request forwarding (plain mode) ----------------------------------
+    fw_ch = st["fw_ch"]
+    if not mandator_mode:
+        wl = workload.arrive(wl, key, t, rate_per_tick, alive)
+        # forward whole local buffer to my current leader
+        cnt = wl["buffer"]
+        tsum = wl["buffer_tsum"]
+        fw_pay = jnp.stack([cnt, tsum], axis=-1)[:, None, :] * jnp.ones((n, n, 1))
+        # the leader keeps local arrivals in its own pool (no self-forward)
+        fw_mask = (jnp.arange(n)[None, :] == leader[:, None]) & alive[:, None] \
+            & (cnt > 0)[:, None] & (rows != leader)[:, None]
+        fw_ch = ch.send(fw_ch, t, fw_pay, delays, fw_mask, additive=True)
+        wl = dict(wl)
+        sent = fw_mask.any(axis=1)
+        wl["buffer"] = jnp.where(sent, 0.0, wl["buffer"])
+        wl["buffer_tsum"] = jnp.where(sent, 0.0, wl["buffer_tsum"])
+        # leader pools forwarded requests
+        fw_ch, ffl, fpay = ch.deliver(fw_ch, t)
+        pool_cnt = jnp.sum(jnp.where(ffl[..., None], fpay, 0.0), axis=0)  # [rcv,2]
+        wl["buffer"] = wl["buffer"] + pool_cnt[:, 0]
+        wl["buffer_tsum"] = wl["buffer_tsum"] + pool_cnt[:, 1]
+
+    # ---- deliver acks; leader commit ---------------------------------------
+    ack_ch, afl, apay = ch.deliver(st["ack_ch"], t)
+    acks = ch.fold_state(st["acks"].astype(jnp.float32)[..., None], afl, apay
+                         )[..., 0].astype(jnp.int32)
+    ack_cnt = jnp.sum(acks >= st["slot"][:, None], axis=1)
+    commit = i_am_leader & st["outstanding"] & (ack_cnt >= maj)
+    committed_slot = jnp.where(commit, st["slot"], st["committed_slot"])
+    outstanding = st["outstanding"] & ~commit
+    # record commit time of the slot batch (plain) / advance VC (mandator)
+    if mandator_mode:
+        cvc = jnp.where(commit[:, None],
+                        jnp.maximum(st["cvc"], st["slot_vc"][:, 1:].astype(jnp.int32)),
+                        st["cvc"])
+    else:
+        cvc = st["cvc"]
+        # commit times are recorded post-hoc from the committed_slot trace
+    # ---- leader proposes next slot -----------------------------------------
+    can_prop = i_am_leader & ~outstanding & (tf >= st["ready_at"])
+    if mandator_mode:
+        have = (lcr[rows] > cvc).any(axis=1) if lcr is not None else False
+        have = have & can_prop
+        slot = jnp.where(have, st["slot"] + 1, st["slot"])
+        pay_vc = jnp.where(have[:, None], lcr[rows].astype(jnp.float32),
+                           st["slot_vc"][:, 1:])
+        slot_vc = jnp.concatenate(
+            [slot[:, None].astype(jnp.float32), pay_vc], axis=1)
+        size_bytes = jnp.where(have, jnp.float32(cfg.meta_bytes), 0.0)
+        formed = have
+        count = jnp.zeros((n,))
+    else:
+        wl, formed, count = workload.form_batches(
+            wl, t, can_prop, st["slot"] + 1, cfg.batch_paxos,
+            cfg.max_batch_ms / cfg.tick_ms)
+        slot = jnp.where(formed, st["slot"] + 1, st["slot"])
+        slot_vc = st["slot_vc"]
+        size_bytes = jnp.where(formed, count * cfg.request_bytes + 100.0, 0.0)
+    outstanding = outstanding | formed
+    # egress serialization (monolithic payload cost)
+    bytes_out = jnp.broadcast_to(size_bytes[:, None], (n, n)) / env["bytes_per_tick"]
+    busy, ser = netsim.egress_delay(st["egress_busy"], t, bytes_out)
+    busy = jnp.where(formed, busy, st["egress_busy"])
+    total_delay = (delays + jnp.where(formed[:, None], ser, 0.0)).astype(jnp.int32)
+    acc_pay = jnp.concatenate([
+        view[:, None].astype(jnp.float32), slot[:, None].astype(jnp.float32),
+        jnp.zeros((n, 1)),
+        slot_vc[:, 1:] if mandator_mode else jnp.zeros((n, n))], axis=1
+        )[:, None, :] * jnp.ones((n, n, 1))
+    acc_ch = ch.send(st["acc_ch"], t, acc_pay, total_delay,
+                     formed[:, None] & jnp.ones((n, n), jnp.bool_))
+
+    # ---- follower: deliver accepts, ack, heartbeat --------------------------
+    acc_ch, cfl, cpay = ch.deliver(acc_ch, t)
+    arr = jnp.swapaxes(cpay, 0, 1)
+    afl2 = jnp.swapaxes(cfl, 0, 1)
+    got = afl2.any(axis=1)
+    mx = jnp.max(jnp.where(afl2[..., None], arr, -1.0), axis=1)
+    acc_view = mx[:, 0].astype(jnp.int32)
+    acc_slot = mx[:, 1].astype(jnp.int32)
+    fresh = got & (acc_view >= view) & alive
+    view = jnp.where(fresh, acc_view, view)
+    last_heard = jnp.where(fresh, tf, st["last_heard"])
+    # ack to the slot's leader
+    ack_mask = fresh[:, None] & (jnp.arange(n)[None, :] == (view % n)[:, None])
+    ack_pay = acc_slot.astype(jnp.float32)[:, None, None] * jnp.ones((n, n, 1))
+    ack_ch = ch.send(ack_ch, t, ack_pay, delays, ack_mask)
+
+    # ---- view change ---------------------------------------------------------
+    expired = alive & (tf - last_heard > to_ticks)
+    view = jnp.where(expired, view + 1, view)
+    last_heard = jnp.where(expired, tf, last_heard)
+    became_leader = expired & ((view % n) == rows)
+    ready_at = jnp.where(became_leader, tf + st["phase1"], st["ready_at"])
+
+    st.update(wl=wl, view=view, last_heard=last_heard, ready_at=ready_at,
+              slot=slot, outstanding=outstanding, acks=acks,
+              committed_slot=committed_slot, cvc=cvc, slot_vc=slot_vc,
+              fw_ch=fw_ch, acc_ch=acc_ch, ack_ch=ack_ch, egress_busy=busy)
+    return st

@@ -1,0 +1,79 @@
+"""Open-loop Poisson workload (§5.2) + batch bookkeeping.
+
+Batch records are global arrays indexed [origin, round]:
+  create_t   — tick when the batch was formed
+  arr_mean   — mean arrival tick of its requests (for execution latency)
+  count      — number of requests in the batch
+Commit times are reconstructed post-hoc from the per-tick committed-VC
+trace (searchsorted), so the hot loop never touches [n, R_MAX] arrays.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.smr import SMRConfig
+
+
+def init_workload(cfg: SMRConfig, n_ticks: int) -> Dict[str, jax.Array]:
+    n = cfg.n_replicas
+    return {
+        "buffer": jnp.zeros((n,), jnp.float32),        # pending request count
+        "buffer_tsum": jnp.zeros((n,), jnp.float32),   # sum of arrival ticks
+        "last_batch_t": jnp.zeros((n,), jnp.float32),
+        "cpu_tokens": jnp.zeros((n,), jnp.float32),
+        "batch_create_t": jnp.full((n, n_ticks), jnp.inf, jnp.float32),
+        "batch_arr_mean": jnp.zeros((n, n_ticks), jnp.float32),
+        "batch_count": jnp.zeros((n, n_ticks), jnp.float32),
+    }
+
+
+def arrive(wl: Dict, key: jax.Array, t: jax.Array, rate_per_tick: jax.Array,
+           alive: jax.Array) -> Dict:
+    """Poisson arrivals this tick at each replica's colocated clients."""
+    lam = jnp.broadcast_to(rate_per_tick, alive.shape)
+    cnt = jax.random.poisson(key, lam).astype(jnp.float32) * alive
+    wl = dict(wl)
+    wl["buffer"] = wl["buffer"] + cnt
+    wl["buffer_tsum"] = wl["buffer_tsum"] + cnt * t
+    return wl
+
+
+def refill_cpu(wl: Dict, cpu_req_per_tick: jax.Array) -> Dict:
+    wl = dict(wl)
+    wl["cpu_tokens"] = jnp.minimum(wl["cpu_tokens"] + cpu_req_per_tick, 1e7)
+    return wl
+
+
+def form_batches(wl: Dict, t: jax.Array, can_form: jax.Array,
+                 round_idx: jax.Array, batch_size: int, batch_ticks: float
+                 ) -> Tuple[Dict, jax.Array, jax.Array]:
+    """can_form: [n] bool (protocol gate, e.g. ~awaitingAcks & alive).
+    round_idx: [n] int32 — the chain round the new batch would get.
+    Returns (wl, formed [n] bool, count [n] float)."""
+    wl = dict(wl)
+    size_ok = wl["buffer"] >= batch_size
+    time_ok = (t - wl["last_batch_t"] >= batch_ticks) & (wl["buffer"] > 0)
+    formed = can_form & (size_ok | time_ok) & (wl["cpu_tokens"] >= 1.0)
+    count = jnp.where(formed,
+                      jnp.minimum(jnp.minimum(wl["buffer"], batch_size),
+                                  wl["cpu_tokens"]), 0.0)
+    frac = jnp.where(wl["buffer"] > 0, count / jnp.maximum(wl["buffer"], 1.0), 0.0)
+    tsum_taken = wl["buffer_tsum"] * frac
+    arr_mean = jnp.where(count > 0, tsum_taken / jnp.maximum(count, 1.0), 0.0)
+    n = count.shape[0]
+    rows = jnp.arange(n)
+    idx = jnp.clip(round_idx, 0, wl["batch_create_t"].shape[1] - 1)
+    wl["batch_create_t"] = wl["batch_create_t"].at[rows, idx].min(
+        jnp.where(formed, t.astype(jnp.float32), jnp.inf))
+    wl["batch_arr_mean"] = wl["batch_arr_mean"].at[rows, idx].add(
+        jnp.where(formed, arr_mean, 0.0))
+    wl["batch_count"] = wl["batch_count"].at[rows, idx].add(count)
+    wl["buffer"] = wl["buffer"] - count
+    wl["buffer_tsum"] = wl["buffer_tsum"] - tsum_taken
+    wl["cpu_tokens"] = wl["cpu_tokens"] - count
+    wl["last_batch_t"] = jnp.where(formed, t.astype(jnp.float32),
+                                   wl["last_batch_t"])
+    return wl, formed, count

@@ -1,0 +1,70 @@
+"""Deterministic synthetic token pipeline: seeded, shardable, restartable.
+
+Every (step, host) pair derives its shard of the global batch purely from
+(seed, step) — restart/elastic-rescale replay exact batches (the data-plane
+analogue of Mandator's "replicas repeatedly propose until committed"). A
+Zipfian unigram over the vocab + Markov low-order structure gives a
+learnable distribution (loss decreases measurably within a few hundred
+steps on the quickstart).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    zipf_exponent: float = 1.1
+    markov_shift: int = 7     # next-token bias: x_{t+1} ~ (x_t * a + c) pattern
+
+
+def _zipf_logits(vocab: int, exponent: float) -> jax.Array:
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    return -exponent * jnp.log(ranks)
+
+
+def global_batch(cfg: ModelConfig, shape: ShapeConfig, dcfg: DataConfig,
+                 step: int | jax.Array) -> Dict[str, jax.Array]:
+    """Materialize the full global batch for `step` (test/CPU scale)."""
+    return batch_shard(cfg, shape, dcfg, step, shard=0, n_shards=1)
+
+
+def batch_shard(cfg: ModelConfig, shape: ShapeConfig, dcfg: DataConfig,
+                step: int | jax.Array, shard: int, n_shards: int
+                ) -> Dict[str, jax.Array]:
+    """The per-host shard of the global batch — pure function of
+    (seed, step, shard)."""
+    assert shape.global_batch % n_shards == 0
+    b = shape.global_batch // n_shards
+    s = shape.seq_len
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(dcfg.seed),
+                           jnp.asarray(step, jnp.uint32)),
+        jnp.asarray(shard, jnp.uint32))
+    logits = _zipf_logits(cfg.vocab, dcfg.zipf_exponent)
+    base = jax.random.categorical(key, logits, shape=(b, s + 1))
+    # inject learnable sequential structure
+    t = jnp.arange(s + 1)
+    drift = (t * dcfg.markov_shift) % max(cfg.vocab // 7, 1)
+    tokens = (base + drift[None, :]) % cfg.vocab
+    out: Dict[str, jax.Array] = {}
+    if cfg.embed_inputs:
+        out["tokens"] = tokens[:, :s].astype(jnp.int32)
+    else:
+        emb_key = jax.random.fold_in(key, 1)
+        out["frame_emb"] = 0.02 * jax.random.normal(
+            emb_key, (b, s, cfg.d_model), jnp.float32)
+    out["labels"] = tokens[:, 1:s + 1].astype(jnp.int32)
+    if cfg.cross_attn is not None:
+        mem_key = jax.random.fold_in(key, 2)
+        out["vision_mem"] = 0.02 * jax.random.normal(
+            mem_key, (b, cfg.cross_attn.n_mem_tokens, cfg.d_model),
+            jnp.float32)
+    return out

@@ -1,0 +1,234 @@
+"""Sharding policy: DP / FSDP / TP / EP / SP rules per (arch x shape).
+
+Mesh axes: ("pod", "data", "model") multi-pod, ("data", "model") single pod.
+- batch        -> ("pod", "data")   [DP; pod axis is pure DP -> clean elastic]
+- weights      -> TP over "model" on head/ffn/expert/channel dims; FSDP over
+                  "data" on the other big dim for >=20B-param archs (ZeRO-3)
+- experts      -> EP over "model" (leading expert dim)
+- KV cache     -> batch over "data", sequence over "model" (SP decode:
+                  flash-decoding style partial-softmax combine, inserted by
+                  SPMD from the sharding constraints)
+- optimizer    -> same specs as params (ZeRO-1 falls out of FSDP+TP)
+
+Every rule degrades to replication when a dim is not divisible by the axis
+size (e.g. smollm's 9 heads), so every (arch x shape x mesh) cell compiles.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, param_count
+
+FSDP_THRESHOLD = 20_000_000_000  # params; above this, shard weights over data
+
+
+def _axis(mesh: Mesh, name: str) -> Optional[str]:
+    return name if name in mesh.axis_names else None
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, tuple):
+        k = 1
+        for a in axis:
+            k *= sizes[a]
+    else:
+        k = sizes[axis]
+    return n % k == 0
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh, *,
+                fsdp: bool, stacked: bool, policy: str = "tp") -> P:
+    """Sharding rule for one parameter leaf. `path` is the flattened key
+    path; `stacked` leaves carry a leading repeats dim.
+
+    Policies (hillclimbs — EXPERIMENTS.md §Perf):
+      tp        — baseline TP(+FSDP) rules
+      seqpar    — replicate backbone weights (small models); activations are
+                  sequence-sharded via CallConfig.seq_axis
+      tp_gqa    — as tp, but KV projections replicated (pairs with
+                  CallConfig.gqa_expand_kv: head-aligned attention TP)
+      ep_data   — as tp_gqa, but MoE experts sharded over the *data* axis
+                  (EP via dispatch all-to-all; no per-step weight gathers)
+    """
+    lead = (None,) if stacked else ()
+    dims = shape[1:] if stacked else shape
+    model = _axis(mesh, "model")
+    data = _axis(mesh, "data") if fsdp else None
+
+    def ok(i, ax):  # divisibility guard
+        return ax if _div(dims[i], mesh, ax) else None
+
+    name = path.split("/")[-1]
+    if policy == "seqpar":
+        # replicate everything (incl. head: logits stay sequence-sharded,
+        # the loss never gathers S or V)
+        return P(*lead, *([None] * len(dims)))
+    if "embed" in path or name == "head":
+        if name == "embed":
+            return P(*lead, ok(0, model), None)         # [V, D]
+        return P(*lead, None, ok(1, model))             # [D, V]
+    if name in ("final_norm", "norm1", "norm2", "cross_norm"):
+        return P(*lead, None)
+    if len(dims) == 3 and name in ("w_gate", "w_up", "w_down"):
+        # MoE expert weights [E, D, F] / [E, F, D]
+        if policy in ("ep_data", "ep_seq"):
+            e_ax = ok(0, _axis(mesh, "data"))
+            f_idx = 2 if name != "w_down" else 1
+            spec = [e_ax, None, None]
+            if _div(dims[f_idx], mesh, model):
+                spec[f_idx] = model
+            return P(*lead, *spec)
+        e_ax = ok(0, model)
+        f_ax = ok(1, data) if e_ax else ok(1, model)
+        return P(*lead, e_ax, f_ax, None)
+    if name == "router":
+        return P(*lead, None, None)
+    if policy == "ep_seq":
+        # sequence-parallel backbone: dense weights FSDP over data only
+        # (attention is sharded on S, so head dims stay whole)
+        fs = _axis(mesh, "data")
+        if len(dims) == 2:
+            return P(*lead, ok(0, fs), None)
+        if len(dims) == 1:
+            return P(*lead, None)
+    if policy in ("tp_gqa", "ep_data") and name in ("wk", "wv", "bk", "bv"):
+        return P(*lead, *([None] * len(dims)))          # replicate KV proj
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_og",
+                "w_i", "w_f", "w_z", "w_o"):
+        return P(*lead, ok(0, data), ok(1, model))      # [D, out]
+    if name in ("wo", "w_down", "w_out"):
+        return P(*lead, ok(0, model), ok(1, data))      # [in, D]
+    if name in ("bq", "bk", "bv", "conv_b", "dt_bias", "b_og", "b_i", "b_f",
+                "b_z", "b_o", "D"):
+        return P(*lead, ok(0, model))
+    if name in ("w_bc", "w_dt", "A_log"):
+        return P(*lead, ok(0, model), None)             # [Di, *]
+    if name == "conv_w":
+        return P(*lead, None, ok(1, model))             # [K, Di]
+    if name.startswith("r_"):                            # sLSTM [H, dh, dh]
+        return P(*lead, None, None, ok(2, model))
+    if name in ("q_norm", "k_norm"):
+        return P(*lead, None)
+    return P(*lead, *([None] * len(dims)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pe in path:
+        if hasattr(pe, "key"):
+            parts.append(str(pe.key))
+        elif hasattr(pe, "idx"):
+            parts.append(str(pe.idx))
+        else:
+            parts.append(str(pe))
+    return "/".join(parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape,
+                    policy: str = "tp") -> Any:
+    """Pytree of NamedSharding matching init_params structure (from
+    jax.eval_shape)."""
+    fsdp = param_count(cfg) >= FSDP_THRESHOLD
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("blocks")
+        spec = param_pspec(ps, leaf.shape, mesh, fsdp=fsdp, stacked=stacked,
+                           policy=policy)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    batch_shape) -> Any:
+    """Input batch: shard the leading batch dim over (pod, data)."""
+    baxes = batch_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        ax = baxes if (baxes and _div(b, mesh, baxes)) else (
+            ("data",) if _div(b, mesh, "data" if "data" in mesh.axis_names
+                              else None) else ())
+        spec = P(ax if ax else None, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    cache_shape) -> Any:
+    """KV/recurrent cache: batch -> data axes, long dims -> model (SP)."""
+    model = _axis(mesh, "model")
+    baxes = batch_axes(mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        dims = leaf.shape              # [R, B, ...]
+        b = dims[1]
+        b_ax = baxes if (baxes and _div(b, mesh, baxes)) else (
+            ("data",) if _div(b, mesh, ("data",)) else None)
+        rest: list = [None] * (len(dims) - 2)
+        if name in ("k", "v"):
+            # [R, B, S, Kh, Dh] — shard sequence (SP decode)
+            s_ax = model
+            if b_ax is None and _div(dims[2], mesh, ("data", "model")
+                                     if "data" in mesh.axis_names else model):
+                s_ax = tuple(a for a in ("data", "model")
+                             if a in mesh.axis_names)
+            if _div(dims[2], mesh, s_ax):
+                rest[0] = s_ax
+        elif name in ("conv", "h", "C", "n", "m", "c"):
+            # recurrent state: shard the (largest) channel dim over model
+            #   mamba: conv [R,B,K,Di]->Di@1, h [R,B,Di,N]->Di@0
+            #   mlstm: C [R,B,H,dk,dv]->dk@1, n [R,B,H,dk]->dk@1, m: none
+            #   slstm: c/n/h/m [R,B,Di]->Di@0
+            if len(dims) == 3:
+                ch_idx = 0
+            elif name == "conv":
+                ch_idx = 1
+            elif name == "h":
+                ch_idx = 0
+            elif name in ("C", "n"):
+                ch_idx = 1
+            else:
+                ch_idx = None
+            if ch_idx is not None and ch_idx < len(rest) \
+                    and _div(dims[2 + ch_idx], mesh, model):
+                rest[ch_idx] = model
+        spec = P(None, b_ax, *rest)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def constrain_activations(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:
+    if mesh is None:
+        return x
+    baxes = batch_axes(mesh)
+    if baxes and x.shape[0] % _prod_axes(mesh, baxes) == 0:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(baxes, *([None] * (x.ndim - 1)))))
+    return x
+
+
+def _prod_axes(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    k = 1
+    for a in axes:
+        k *= sizes[a]
+    return k

@@ -1,0 +1,97 @@
+"""jit-able train / prefill / decode steps with sharding constraints.
+
+train_step: loss -> grad -> AdamW update (optionally int8 moments, int8
+error-feedback gradient compression across the DP axes).
+serve_step: one decode token against a (possibly sequence-sharded) cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import CallConfig, forward_decode, init_cache, loss_fn
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, call: CallConfig, opt: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return loss_fn(p, cfg, call, batch)
+
+        (loss, parts), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, om = apply_updates(opt, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, call: CallConfig):
+    def serve_step(params, cache, batch, pos):
+        logits, cache = forward_decode(params, cfg, call, batch, cache, pos)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, call: CallConfig):
+    from repro.models import forward_train
+
+    def prefill_step(params, batch):
+        logits, _ = forward_train(params, cfg, call, batch)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation) — dry-run contract
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Stand-ins for every model input of the given workload shape."""
+    b = shape.global_batch
+    s = shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {}
+        if cfg.embed_inputs:
+            batch["tokens"] = sds((b, s), jnp.int32)
+        else:
+            batch["frame_emb"] = sds((b, s, cfg.d_model), dtype)
+        batch["labels"] = sds((b, s), jnp.int32)
+        if cfg.cross_attn is not None:
+            batch["vision_mem"] = sds((b, cfg.cross_attn.n_mem_tokens,
+                                       cfg.d_model), dtype)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embed_inputs:
+            batch["tokens"] = sds((b, s), jnp.int32)
+        else:
+            batch["frame_emb"] = sds((b, s, cfg.d_model), dtype)
+        if cfg.cross_attn is not None:
+            batch["vision_mem"] = sds((b, cfg.cross_attn.n_mem_tokens,
+                                       cfg.d_model), dtype)
+        return batch
+    # decode: one new token against a cache of length seq_len
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = sds((b,), jnp.int32)
+    else:
+        batch["frame_emb"] = sds((b, 1, cfg.d_model), dtype)
+    if cfg.cross_attn is not None:
+        batch["vision_mem"] = sds((b, cfg.cross_attn.n_mem_tokens,
+                                   cfg.d_model), dtype)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        partial(init_cache, cfg, shape.global_batch, shape.seq_len, dtype))

@@ -1,0 +1,89 @@
+"""Flash-decoding Pallas-TPU kernel: single-token query, long KV cache.
+
+The decode roofline cells are HBM-bound on the cache read (EXPERIMENTS.md
+§Roofline); this kernel streams KV blocks HBM->VMEM once with a running
+(m, l, acc) online softmax — the decode analogue of flash attention, and
+the structure that a sequence-sharded cache composes with (each shard
+reduces its local blocks; the tiny (acc, m, l) combine crosses shards).
+
+Grid: (batch, q_head, S/bs); the last dim is sequential so fp32 scratch
+persists. GQA via kv-head index map h // (H/Kh). ``kv_len`` masks the
+unfilled cache tail (delivered via a [B, 1] int32 operand).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, bs: int, num_s: int):
+    is_ = pl.program_id(2)
+
+    @pl.when(is_ == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # [1, d] (lane-major)
+    k = k_ref[0, 0].astype(jnp.float32)                # [bs, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [1, bs]
+    s = s * (1.0 / (q.shape[-1] ** 0.5))
+    pos = is_ * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos < len_ref[0, 0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(is_ == num_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            kv_len: jax.Array, *, bs: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: [B, H, D]; k, v: [B, Kh, S, D]; kv_len: [B] int32 -> [B, H, D]."""
+    b, h, d = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    assert h % kh == 0 and s % bs == 0, (q.shape, k.shape, bs)
+    group = h // kh
+    num_s = s // bs
+    kernel = functools.partial(_decode_kernel, bs=bs, num_s=num_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, num_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ib, ih, is_: (ib, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, d), lambda ib, ih, is_: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda ib, ih, is_: (ib, ih // group, is_, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda ib, ih, is_: (ib, ih // group, is_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda ib, ih, is_: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.reshape(b, 1).astype(jnp.int32),
+      q.reshape(b, h, 1, d), k, v).reshape(b, h, d)

@@ -1,0 +1,22 @@
+"""Jit'd wrapper for the flash-decoding kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, bs: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """q: [B, H, D]; k, v: [B, Kh, S, D]; kv_len: [B] -> [B, H, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    s = k.shape[2]
+    while s % bs and bs > 1:
+        bs //= 2
+    return decode_attention_pallas(q, k, v, kv_len, bs=bs,
+                                   interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-decoding kernel: one query token against a
+(possibly partially filled) KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """q: [B, H, D]; k, v: [B, Kh, S, D]; kv_len: [B] — positions >= kv_len
+    are masked. Returns [B, H, D] (fp32 softmax)."""
+    b, h, d = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    qg = q.reshape(b, kh, h // kh, d)
+    logits = jnp.einsum("bkgd,bktd->bkgt", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    valid = jnp.arange(s)[None, :] < kv_len[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p.astype(v.dtype), v)
+    return out.reshape(b, h, d)

@@ -1,0 +1,98 @@
+"""Flash attention Pallas-TPU kernel (causal, GQA).
+
+Grid: (batch, q_head, num_q_blocks, num_kv_blocks) — the last dim is
+sequential on TPU, so fp32 accumulator/m/l scratch persists across KV blocks
+(online softmax). Block shapes are MXU-aligned (128 lanes). KV for query
+head h comes from kv head ``h // (H/Kh)`` via the BlockSpec index map — GQA
+without materializing repeated KV.
+
+TPU adaptation vs the CUDA original: no warp-level shuffles — the online
+softmax runs on [bq, bk] VREG tiles produced by MXU matmuls; HBM->VMEM
+streaming is expressed by BlockSpecs, not cp.async.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, causal: bool, num_kv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    if causal:
+        should_run = (ik * bk) <= (iq * bq + bq - 1)  # skip blocks above diag
+    else:
+        should_run = jnp.bool_(True)
+
+    @pl.when(should_run)
+    def _run():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        s = s * (1.0 / (q.shape[-1] ** 0.5))
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, bq: int = 128, bk: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, Kh, Sk, D]. Returns [B, H, Sq, D]."""
+    b, h, sq, d = q.shape
+    kh, sk = k.shape[1], k.shape[2]
+    assert h % kh == 0 and sq % bq == 0 and sk % bk == 0, (q.shape, k.shape)
+    group = h // kh
+    num_q, num_kv = sq // bq, sk // bk
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               num_kv=num_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, num_q, num_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""Jit'd wrapper: layout handling, padding, CPU-interpret fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: [B, S, H, D]; k, v: [B, S, Kh, D] (model layout). Returns same.
+
+    Pads S up to a block multiple; extra KV rows are masked out by the causal
+    mask (queries in padding are discarded on return).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    bq = min(bq, max(16, 1 << (s - 1).bit_length()))
+    bk = min(bk, bq)
+    pad = (-s) % bq
+    if pad:
+        cfgpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, cfgpad)
+        k = jnp.pad(k, cfgpad)
+        v = jnp.pad(v, cfgpad)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, bq=bq, bk=bk,
+                               interpret=interpret)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :s] if pad else out

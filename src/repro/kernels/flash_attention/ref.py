@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash attention kernel (causal, GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Sk, Kh, D]; H % Kh == 0. fp32 softmax."""
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    qg = q.reshape(b, sq, kh, h // kh, d)
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)

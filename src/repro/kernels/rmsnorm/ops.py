@@ -1,0 +1,28 @@
+"""Jit'd wrapper: arbitrary leading dims, CPU-interpret fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_2d
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+            residual: jax.Array | None = None,
+            interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    n = 1
+    for s_ in shape[:-1]:
+        n *= s_
+    x2 = x.reshape(n, shape[-1])
+    r2 = None if residual is None else residual.reshape(n, shape[-1])
+    bn = 256
+    while n % bn and bn > 1:
+        bn //= 2
+    out = rmsnorm_2d(x2, w, eps=eps, residual=r2, bn=bn, interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused (residual-add +) RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+                residual: jax.Array | None = None) -> jax.Array:
+    """x: [..., D], w: [D]. Residual-add and statistics in fp32 (the fused
+    kernel's semantics), output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w).astype(x.dtype)

@@ -1,0 +1,71 @@
+"""Selective-scan (Mamba) Pallas-TPU kernel.
+
+The CUDA original keeps the [Di, N] state in shared memory and fuses the
+whole recurrence; the TPU adaptation tiles Di across the grid and keeps a
+[bd, N] fp32 state in VMEM scratch, streaming S in chunks via BlockSpecs.
+Grid: (batch, Di/bd, S/chunk) — the S dim is sequential so the state scratch
+carries across chunks. Per time step the update is VPU element-wise work on
+[bd, N]; no [B, S, Di, N] tensor ever exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, h_ref, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a_mat = a_ref[...].astype(jnp.float32)              # [bd, N]
+    d_vec = d_ref[...].astype(jnp.float32)              # [1, bd]
+
+    def step(t, _):
+        xt = x_ref[0, t, :].astype(jnp.float32)         # [bd]
+        dtt = dt_ref[0, t, :].astype(jnp.float32)       # [bd]
+        bt = b_ref[0, t, :].astype(jnp.float32)         # [N]
+        ct = c_ref[0, t, :].astype(jnp.float32)         # [N]
+        a = jnp.exp(dtt[:, None] * a_mat)               # [bd, N]
+        h = a * h_ref[...] + (dtt * xt)[:, None] * bt[None, :]
+        h_ref[...] = h
+        y = jnp.sum(h * ct[None, :], axis=1) + d_vec[0] * xt
+        o_ref[0, t, :] = y.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+def ssm_scan_pallas(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                    A: jax.Array, D: jax.Array, *, bd: int = 256,
+                    chunk: int = 128, interpret: bool = False) -> jax.Array:
+    """x, dt: [Bt, S, Di]; B, C: [Bt, S, N]; A: [Di, N]; D: [Di]."""
+    bsz, s, di = x.shape
+    n = A.shape[1]
+    bd = min(bd, di)
+    chunk = min(chunk, s)
+    assert di % bd == 0 and s % chunk == 0, (x.shape, bd, chunk)
+    grid = (bsz, di // bd, s // chunk)
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    xd_spec = pl.BlockSpec((1, chunk, bd), lambda ib, id_, ic: (ib, ic, id_))
+    bc_spec = pl.BlockSpec((1, chunk, n), lambda ib, id_, ic: (ib, ic, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            xd_spec, xd_spec, bc_spec, bc_spec,
+            pl.BlockSpec((bd, n), lambda ib, id_, ic: (id_, 0)),
+            pl.BlockSpec((1, bd), lambda ib, id_, ic: (0, id_)),
+        ],
+        out_specs=xd_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, s, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A, D.reshape(1, di))

@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def ssm_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+             A: jax.Array, D: jax.Array, *, bd: int = 256, chunk: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    di, s = x.shape[2], x.shape[1]
+    while di % bd and bd > 1:
+        bd //= 2
+    while s % chunk and chunk > 1:
+        chunk //= 2
+    return ssm_scan_pallas(x, dt, B, C, A, D, bd=bd, chunk=chunk,
+                           interpret=interpret)

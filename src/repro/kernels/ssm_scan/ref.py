@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the selective-scan kernel: sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                 A: jax.Array, D: jax.Array) -> jax.Array:
+    """x, dt: [Bt, S, Di]; B, C: [Bt, S, N]; A: [Di, N]; D: [Di].
+
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t * x_t) B_t ;  y_t = h_t . C_t + D x_t
+    """
+    bsz, s, di = x.shape
+    n = A.shape[1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dtf = dtt.astype(jnp.float32)
+        a = jnp.exp(dtf[:, :, None] * A)                        # [Bt,Di,N]
+        h = a * h + (dtf * xt.astype(jnp.float32))[:, :, None] * bt[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bin,bn->bi", h, ct.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                          B.swapaxes(0, 1), C.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    return y + x * D

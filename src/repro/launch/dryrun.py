@@ -1,0 +1,250 @@
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+the production mesh, print memory_analysis + cost_analysis, and record the
+roofline terms. This is the proof that the distribution config is coherent
+without real hardware — failures here are bugs in the framework.
+
+The first two executable lines pin 512 placeholder devices BEFORE any jax
+import (jax locks the device count on first init). This is deliberately NOT
+set globally — smoke tests and benches must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+Artifacts: benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, iter_cells, param_count
+from repro.distributed import hlo_analysis
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        param_shardings)
+from repro.distributed.steps import (cache_specs, input_specs,
+                                     make_serve_step, make_train_step)
+from repro.launch.mesh import make_production_mesh
+from repro.models import CallConfig, init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+
+ART = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+QUANTIZED_STATE_THRESHOLD = 100e9   # int8 moments for >=100B-param archs
+
+
+def _opt_shardings(mesh, opt_shape, p_shardings):
+    """Moments follow the param sharding exactly; quantized slots keep the
+    param's shape (q) / row-scale shape (s) so nothing regathers."""
+
+    def one(path, leaf):
+        names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        if names[0] == "step":
+            return NamedSharding(mesh, P())
+        is_q = names[-1] in ("q", "s")
+        lookup = names[1:-1] if is_q else names[1:]
+        sub = p_shardings
+        for nm in lookup:
+            sub = sub[nm] if isinstance(sub, dict) else sub[int(nm)]
+        if not is_q:
+            return sub
+        spec = list(sub.spec) + [None] * (leaf.ndim - len(sub.spec))
+        if names[-1] == "s":
+            spec[-1] = None                   # row scales: last dim is 1
+        return NamedSharding(mesh, P(*spec[:leaf.ndim]))
+
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+def _analyze(compiled, n_devices: int, model_params: int,
+             active_params: int, tokens: int):
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    mc = hlo_analysis.module_cost(hlo)   # loop-aware (known_trip_count)
+    flops = float(mc["flops"])
+    byt = float(mc["bytes"])
+    coll = mc["collectives"]
+    coll_bytes = float(mc["collective_bytes"])
+    terms = hlo_analysis.roofline_terms(flops, byt, coll_bytes)
+    model_flops = 6.0 * active_params * tokens
+    out = {
+        "devices": n_devices,
+        "flops_per_device": flops,
+        "bytes_per_device": byt,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": coll,
+        "xla_cost_analysis": {k: float(v) for k, v in (cost or {}).items()
+                              if k in ("flops", "bytes accessed")},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_devices,
+        "useful_flop_ratio": (model_flops / n_devices) / flops if flops else 0.0,
+        **terms,
+    }
+    return out, mem, cost
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             call: CallConfig | None = None, verbose: bool = True,
+             policy: str = "tp") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    call = call or CallConfig(compute_dtype=jnp.bfloat16,
+                              attention_impl="chunked", remat=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    n_params = param_count(cfg)
+    n_active = param_count(cfg, active_only=True)
+
+    params_shape = jax.eval_shape(partial(init_params, cfg, dtype=jnp.bfloat16),
+                                  jax.random.PRNGKey(0))
+    p_sh = param_shardings(cfg, mesh, params_shape, policy=policy)
+    batch = input_specs(cfg, shape)
+    b_sh = batch_shardings(cfg, shape, mesh, batch)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = AdamWConfig(
+            quantized_state=(n_params >= QUANTIZED_STATE_THRESHOLD))
+        opt_shape = jax.eval_shape(partial(init_opt_state, opt), params_shape)
+        o_sh = _opt_shardings(mesh, opt_shape, p_sh)
+        step = make_train_step(cfg, call, opt)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None))
+        with mesh:
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+            compiled = lowered.compile()
+        tokens = shape.global_batch * shape.seq_len
+        # train step ~ 3x forward FLOPs; 6ND counts fwd+bwd already
+        n_for_flops = n_active
+    else:
+        # prefill is lowered as a train-shaped forward; decode uses the cache
+        if shape.kind == "prefill":
+            from repro.distributed.steps import make_prefill_step
+            step = make_prefill_step(cfg, call)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=None)
+            with mesh:
+                lowered = jitted.lower(params_shape, batch)
+                compiled = lowered.compile()
+            tokens = shape.global_batch * shape.seq_len // 3  # fwd only: 2ND
+        else:
+            cshape = cache_specs(cfg, shape)
+            c_sh = cache_shardings(cfg, shape, mesh, cshape)
+            step = make_serve_step(cfg, call)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh, None),
+                             out_shardings=(b_sh.get("tokens") or
+                                            NamedSharding(mesh, P()), c_sh))
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            with mesh:
+                lowered = jitted.lower(params_shape, cshape, batch, pos)
+                compiled = lowered.compile()
+            tokens = shape.global_batch // 3  # one token, fwd only
+        n_for_flops = n_active
+
+    out, mem, cost = _analyze(compiled, n_dev, n_params, n_for_flops,
+                              max(tokens, 1))
+    out.update(arch=arch, shape=shape_name,
+               mesh="multi" if multi_pod else "single", policy=policy,
+               compile_s=round(time.time() - t0, 1),
+               params_total=n_params, params_active=n_active)
+    if verbose:
+        print(f"== {arch} x {shape_name} x "
+              f"{'2x16x16' if multi_pod else '16x16'} ==")
+        print(mem)
+        print({k: v for k, v in (cost or {}).items()
+               if k in ("flops", "bytes accessed")})
+        print(f"  compute={out['compute_s']*1e3:.2f}ms "
+              f"memory={out['memory_s']*1e3:.2f}ms "
+              f"collective={out['collective_s']*1e3:.2f}ms "
+              f"dominant={out['dominant']} "
+              f"useful_flops={out['useful_flop_ratio']:.2f} "
+              f"[compile {out['compile_s']}s]")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attention", default="chunked",
+                    choices=["dense", "chunked"])
+    ap.add_argument("--policy", default="tp",
+                    choices=["tp", "seqpar", "tp_gqa", "ep_data", "ep_seq"])
+    ap.add_argument("--moe-group", type=int, default=1024)
+    ap.add_argument("--seq-axis", default=None)
+    ap.add_argument("--gqa-expand", action="store_true")
+    ap.add_argument("--moe-ep-axis", default=None)
+    ap.add_argument("--attn-chunk", type=int, default=512)
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix (hillclimb variants)")
+    args = ap.parse_args()
+    ART.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    call = CallConfig(compute_dtype=jnp.bfloat16,
+                      attention_impl=args.attention, remat=True,
+                      attn_chunk=args.attn_chunk,
+                      batch_axes=("pod", "data") if args.mesh == "multi"
+                      else ("data",),
+                      seq_axis=args.seq_axis,
+                      gqa_expand_kv=args.gqa_expand,
+                      moe_ep_axis=args.moe_ep_axis,
+                      moe_group_size=args.moe_group)
+
+    cells = []
+    if args.all:
+        for cfg, shape, ok in iter_cells():
+            cells.append((cfg.name, shape.name, ok))
+    else:
+        cfg = get_config(args.arch)
+        ok = SHAPES[args.shape].name != "long_500k" or cfg.sub_quadratic
+        cells = [(args.arch, args.shape, ok)]
+
+    n_fail = 0
+    for arch, shape_name, ok in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if mp else 'single'}"
+            if args.tag:
+                tag += f"__{args.tag}"
+            path = ART / f"{tag}.json"
+            if not ok:
+                rec = {"arch": arch, "shape": shape_name,
+                       "mesh": "multi" if mp else "single",
+                       "skipped": "full-attention arch; long_500k requires "
+                                  "sub-quadratic support (DESIGN.md §5)"}
+                path.write_text(json.dumps(rec, indent=1))
+                print(f"-- skip {tag}")
+                continue
+            try:
+                rec = run_cell(arch, shape_name, mp, call=call,
+                               policy=args.policy)
+                path.write_text(json.dumps(rec, indent=1, default=str))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                n_fail += 1
+                print(f"!! FAIL {tag}: {e}")
+                traceback.print_exc()
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

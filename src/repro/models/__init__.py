@@ -1,0 +1,5 @@
+from repro.models.layers import CallConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    forward_decode, forward_train, init_cache, init_params, loss_fn,
+    param_count_actual,
+)

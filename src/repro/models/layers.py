@@ -1,0 +1,416 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (dense + chunked/online-softmax),
+SwiGLU MLP.  Pure JAX; Pallas kernels are selected via ``CallConfig``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def constrain_act(x: jax.Array, call: "CallConfig") -> jax.Array:
+    """Apply the policy's activation sharding (needs an active mesh ctx)."""
+    if not call.batch_axes and call.seq_axis is None:
+        return x
+    spec = [None] * x.ndim
+    if call.batch_axes:
+        spec[0] = call.batch_axes
+    if call.seq_axis is not None and x.ndim >= 3:
+        spec[1] = call.seq_axis
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:       # no mesh context (CPU tests): no-op
+        return x
+
+
+@dataclass(frozen=True)
+class CallConfig:
+    """How to execute the model (orthogonal to what the model is)."""
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    # attention implementation: "dense" materializes [S,S] scores (XLA default),
+    # "chunked" streams KV blocks with online softmax (flash-style, O(S) memory),
+    # "pallas" uses the TPU kernel (validated in interpret mode on CPU).
+    attention_impl: str = "dense"
+    attn_chunk: int = 512
+    use_pallas_norm: bool = False
+    remat: bool = True
+    # decode: KV-cache sequence sharding needs positions masked per shard
+    decode_chunked: bool = False
+    # ---- sharding-policy knobs (hillclimbs; see EXPERIMENTS.md §Perf) ----
+    # constrain activations [B, S, D] to P(batch_axes, seq_axis, None)
+    batch_axes: Tuple[str, ...] = ()
+    seq_axis: Optional[str] = None          # sequence parallelism
+    # expand KV to full heads before attention (kv projections replicated,
+    # q heads TP-aligned -> no GQA resharding collectives)
+    gqa_expand_kv: bool = False
+    # MoE expert-parallel axis for dispatch all-to-alls (None = SPMD default)
+    moe_ep_axis: Optional[str] = None
+    moe_group_size: int = 1024
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5,
+             call: Optional[CallConfig] = None) -> jax.Array:
+    if call is not None and call.use_pallas_norm and x.ndim >= 2:
+        from repro.kernels.rmsnorm.ops import rmsnorm as pl_rmsnorm
+        return pl_rmsnorm(x, w, eps=eps)
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def head_rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """qk-norm: normalize over the head dim. x: [..., Dh], w: [Dh]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] (or [S])."""
+    freqs = rope_freqs(x.shape[-1], theta)                  # [Dh/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+def _gqa_expand(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B,S,H,D] -> [B,S,Kh,G,D]."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, q_pos: Optional[jax.Array] = None,
+                    kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference attention, materializes scores.
+
+    q: [B,Sq,H,D], k/v: [B,Sk,Kh,D].  GQA by head grouping.
+    ``kv_len``: optional [B] or scalar — mask cache positions >= kv_len.
+    ``q_pos``: positions of the queries (for causal masking vs absolute kv idx).
+    """
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    qg = _gqa_expand(q, kh)                               # [B,Sq,Kh,G,D]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32) * scale
+    t_idx = jnp.arange(k.shape[1])
+    if causal:
+        qp = q_pos if q_pos is not None else jnp.arange(sq)
+        mask = t_idx[None, :] <= qp[:, None]              # [Sq, Sk]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    if kv_len is not None:
+        kvl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+        valid = t_idx[None, :] < kvl[:, None]             # [B, Sk]
+        logits = jnp.where(valid[:, None, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+    return out.reshape(b, sq, h, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int = 512,
+                      q_pos: Optional[jax.Array] = None,
+                      kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Flash-style online-softmax over KV chunks — O(Sq·chunk) live memory.
+
+    Used (a) as the XLA-lowerable flash path for the dry-run and (b) as the
+    long-context decode attention. Same signature as dense_attention.
+    """
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    nchunk = -(-sk // chunk)
+    pad = nchunk * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunk, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    qg = _gqa_expand(q, kh)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qp = q_pos if q_pos is not None else jnp.arange(sq)
+    kvl = None if kv_len is None else jnp.asarray(kv_len).reshape(-1)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        (kb, vb), ci = xs
+        t_idx = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, kb).astype(jnp.float32) * scale
+        neg = jnp.float32(-1e30)
+        # additive bias on small shapes — never materialize a full-shape mask
+        if causal:
+            bias = jnp.where(t_idx[None, :] <= qp[:, None], 0.0, neg)  # [q,t]
+            logits = logits + bias[None, None, None]
+        if kvl is not None or pad:
+            vl = jnp.full((b,), sk) if kvl is None else kvl
+            vbias = jnp.where(t_idx[None, :] < vl[:, None], 0.0, neg)  # [b,t]
+            logits = logits + vbias[:, None, None, None]
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, kh, h // kh, sq, d), jnp.float32)
+    m0 = jnp.full((b, kh, h // kh, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kh, h // kh, sq), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  ((kc, vc), jnp.arange(nchunk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---- flash-style custom VJP: backward recomputes per-chunk probabilities
+# from (q, k, v, out, lse) instead of saving scan residuals — O(S·chunk)
+# live memory in both directions (the memory story of FlashAttention).
+
+def _chunk_fwd_lse(q, k, v, *, causal: bool, chunk: int):
+    """Forward returning (out, lse). Shapes as chunked_attention."""
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    nchunk = sk // chunk
+    kc = k.reshape(b, nchunk, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    qg = _gqa_expand(q, kh)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qp = jnp.arange(sq)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        (kb, vb), ci = xs
+        t_idx = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, kb).astype(jnp.float32) * scale
+        if causal:
+            bias = jnp.where(t_idx[None, :] <= qp[:, None], 0.0, -1e30)
+            logits = logits + bias[None, None, None]
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        # materialize probabilities at compute precision: the [q, t] tile is
+        # the dominant HBM tensor on the XLA path (stays in VMEM in the
+        # Pallas kernel); sum/max stats stay fp32
+        pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    g = h // kh
+    acc0 = jnp.zeros((b, kh, g, sq, d), jnp.float32)
+    m0 = jnp.full((b, kh, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  ((kc, vc), jnp.arange(nchunk)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = (acc / jnp.maximum(l[..., None], 1e-30))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    return out, lse
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_chunked(q, k, v, causal: bool, chunk: int):
+    out, _ = _chunk_fwd_lse(q, k, v, causal=causal, chunk=chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, chunk):
+    out, lse = _chunk_fwd_lse(q, k, v, causal=causal, chunk=chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, chunk, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    nchunk = sk // chunk
+    qg = _gqa_expand(q, kh).astype(jnp.float32)            # [b,q,kh,g,d]
+    dog = _gqa_expand(dout, kh).astype(jnp.float32)
+    og = _gqa_expand(out, kh).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qp = jnp.arange(sq)
+    # D_i = rowsum(dout * out)
+    delta = jnp.einsum("bqkgd,bqkgd->bkgq", dog, og)       # [b,kh,g,q]
+    kc = k.reshape(b, nchunk, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+
+    def body(dq_acc, xs):
+        (kb, vb), ci = xs
+        t_idx = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, kb.astype(jnp.float32)) * scale
+        if causal:
+            bias = jnp.where(t_idx[None, :] <= qp[:, None], 0.0, -1e30)
+            logits = logits + bias[None, None, None]
+        cdt = kb.dtype
+        p = jnp.exp(logits - lse[..., None]).astype(cdt)   # [b,kh,g,q,t]
+        dv = jnp.einsum("bkgqt,bqkgd->btkd", p, dog.astype(cdt),
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", dog.astype(cdt), vb,
+                        preferred_element_type=jnp.float32)
+        ds = (p.astype(jnp.float32) * (dp - delta[..., None]) * scale
+              ).astype(cdt)
+        dq_acc = dq_acc + jnp.einsum("bkgqt,btkd->bqkgd", ds, kb,
+                                     preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bkgqt,bqkgd->btkd", ds, qg.astype(cdt),
+                        preferred_element_type=jnp.float32)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((b, sq, kh, g, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0,
+                                  ((kc, vc), jnp.arange(nchunk)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, sk, kh, d)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, sk, kh, d)
+    return (dq.reshape(b, sq, h, d).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+flash_chunked.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_core(q, k, v, *, causal, call: CallConfig,
+                   q_pos=None, kv_len=None) -> jax.Array:
+    full_self = causal and kv_len is None and q_pos is None \
+        and q.shape[1] == k.shape[1]
+    if call.attention_impl == "pallas" and full_self:
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=True)
+    if call.attention_impl in ("chunked", "pallas"):
+        if full_self and k.shape[1] % call.attn_chunk == 0:
+            return flash_chunked(q, k, v, True, call.attn_chunk)
+        return chunked_attention(q, k, v, causal=causal, chunk=call.attn_chunk,
+                                 q_pos=q_pos, kv_len=kv_len)
+    return dense_attention(q, k, v, causal=causal, q_pos=q_pos, kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (self + cross), with KV cache for decode
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, qd)) * std,
+        "wk": jax.random.normal(k2, (d, kvd)) * std,
+        "wv": jax.random.normal(k3, (d, kvd)) * std,
+        "wo": jax.random.normal(k4, (qd, d)) * (qd ** -0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((qd,)); p["bk"] = jnp.zeros((kvd,)); p["bv"] = jnp.zeros((kvd,))
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((cfg.head_dim,)); p["k_norm"] = jnp.ones((cfg.head_dim,))
+    return p
+
+
+def self_attention(p, x, *, cfg: ModelConfig, call: CallConfig,
+                   positions, cache: Optional[dict] = None,
+                   max_seq: Optional[int] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """x: [B,S,D]. Train/prefill: cache=None (prefill may still return one).
+    Decode: S==1 with cache {'k','v'} of [B, Smax, Kh, Dh] and positions [B] or scalar.
+    """
+    b, s, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kh, dh)
+    v = v.reshape(b, s, kh, dh)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if call.gqa_expand_kv and kh < h:
+        # replicate KV heads up front: attention becomes head-parallel with
+        # no [Kh, G] resharding (kv projections are small and replicated)
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+        kh = h
+    pos2d = positions if positions.ndim > 0 else positions[None]
+    q = apply_rope(q, jnp.broadcast_to(pos2d.reshape(1, -1) if pos2d.ndim == 1
+                                       else pos2d, (b, s)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(pos2d.reshape(1, -1) if pos2d.ndim == 1
+                                       else pos2d, (b, s)), cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and s == 1:          # decode
+        pos = positions.reshape(())            # scalar position
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        out = attention_core(q, ck, cv, causal=False, call=call,
+                             kv_len=pos + 1)
+    else:                                      # train / prefill
+        out = attention_core(q, k, v, causal=True, call=call)
+        if max_seq is not None:               # prefill: build cache
+            pad = max_seq - s
+            new_cache = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            }
+    out = out.reshape(b, s, h * dh)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), new_cache
+
+
+def cross_attention(p, x, mem, *, cfg: ModelConfig, call: CallConfig) -> jax.Array:
+    """x: [B,S,D], mem: [B,M,D] (stubbed modality embeddings)."""
+    b, s, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bmd,de->bme", mem, p["wk"]).reshape(b, -1, kh, dh)
+    v = jnp.einsum("bmd,de->bme", mem, p["wv"]).reshape(b, -1, kh, dh)
+    out = attention_core(q, k, v, causal=False, call=call)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dh), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "w_gate": jax.random.normal(k1, (d, d_ff)) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (d, d_ff)) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (d_ff, d)) * d_ff ** -0.5,
+    }
+
+
+def swiglu(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])

@@ -1,0 +1,274 @@
+"""Decoder LM composition: embed -> scan over super-blocks -> norm -> head.
+
+A *super-block* is the smallest repeating period of layer kinds (dense: 1;
+jamba: 8 [7 mamba + 1 attn, MoE every 2]; xlstm: 8 [7 mLSTM + 1 sLSTM];
+vlm: 5 [4 self + 1 cross]). Parameters are stacked [R, ...] over repeats and
+the decoder scans over R — HLO size stays O(period), not O(n_layers).
+
+Entry points:
+  init_params(cfg, key, dtype)
+  forward_train(params, cfg, call, batch)        -> (logits, aux)
+  init_cache(cfg, batch, max_seq, dtype)
+  forward_decode(params, cfg, call, batch, cache, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+from repro.models.layers import (CallConfig, constrain_act, cross_attention,
+                                 init_attention, init_mlp, rms_norm,
+                                 self_attention, swiglu)
+from repro.models.moe import init_moe, moe_mlp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, kind: str, has_moe: bool, has_cross: bool, key):
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,))}
+    if kind == "attn":
+        p["mixer"] = init_attention(cfg, ks[0])
+    elif kind == "mamba":
+        p["mixer"] = ssm.init_mamba(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["mixer"] = ssm.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if has_cross:
+        p["cross_norm"] = jnp.ones((cfg.d_model,))
+        p["cross"] = init_attention(cfg, ks[1], cross=True)
+    if has_moe:
+        p["norm2"] = jnp.ones((cfg.d_model,))
+        p["moe"] = init_moe(cfg, ks[2])
+    elif cfg.d_ff:
+        p["norm2"] = jnp.ones((cfg.d_model,))
+        p["mlp"] = init_mlp(cfg, ks[2], cfg.d_ff)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    period = cfg.block_period
+    repeats = cfg.n_layers // period
+    kinds = cfg.layer_kinds()
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+    p: Params = {"final_norm": jnp.ones((cfg.d_model,))}
+    if cfg.embed_inputs:
+        p["embed"] = jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(k_head, (cfg.d_model, cfg.vocab)) \
+            * cfg.d_model ** -0.5
+
+    def init_block(bkey):
+        pos_keys = jax.random.split(bkey, period)
+        return [
+            _init_layer(cfg, kinds[i], cfg.layer_has_moe(i),
+                        cfg.layer_has_cross_attn(i), pos_keys[i])
+            for i in range(period)
+        ]
+
+    bkeys = jax.random.split(k_blocks, repeats)
+    p["blocks"] = jax.vmap(init_block)(bkeys)      # leaves stacked [R, ...]
+    return jax.tree.map(lambda a: a.astype(dtype), p)
+
+
+def param_count_actual(params: Params) -> int:
+    return sum(a.size for a in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, call: CallConfig, kind: str, lp: Params,
+                 x: jax.Array, *, positions, mem, cache: Optional[dict],
+                 max_seq: Optional[int], use_kernel_scan: bool
+                 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps, call)
+    new_cache = None
+    if kind == "attn":
+        out, new_cache = self_attention(lp["mixer"], h, cfg=cfg, call=call,
+                                        positions=positions, cache=cache,
+                                        max_seq=max_seq)
+    elif kind == "mamba":
+        if cache is not None:
+            out, new_cache = ssm.mamba_decode(lp["mixer"], h, cache, cfg=cfg)
+        else:
+            out = ssm.mamba_forward(lp["mixer"], h, cfg=cfg,
+                                    use_kernel=use_kernel_scan)
+    elif kind == "mlstm":
+        if cache is not None:
+            out, new_cache = ssm.mlstm_decode(lp["mixer"], h, cache, cfg=cfg)
+        else:
+            out = ssm.mlstm_forward(lp["mixer"], h, cfg=cfg)
+    elif kind == "slstm":
+        if cache is not None:
+            out, new_cache = ssm.slstm_decode(lp["mixer"], h, cache, cfg=cfg)
+        else:
+            out = ssm.slstm_forward(lp["mixer"], h, cfg=cfg)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if "cross" in lp:
+        hc = rms_norm(x, lp["cross_norm"], cfg.norm_eps, call)
+        x = x + cross_attention(lp["cross"], hc, mem, cfg=cfg, call=call)
+    if "moe" in lp:
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps, call)
+        tok_axes = call.batch_axes + ((call.seq_axis,)
+                                      if call.seq_axis else ())
+        y, aux = moe_mlp(lp["moe"], h2, cfg=cfg, ep_axis=call.moe_ep_axis,
+                         group_size=call.moe_group_size, tok_axes=tok_axes)
+        x = x + y
+    elif "mlp" in lp:
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps, call)
+        x = x + swiglu(lp["mlp"], h2)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(params: Params, cfg: ModelConfig, call: CallConfig, batch: Dict):
+    if cfg.embed_inputs:
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["frame_emb"]
+    mem = batch.get("vision_mem")
+    return x.astype(call.compute_dtype), (
+        None if mem is None else mem.astype(call.compute_dtype))
+
+
+def _head(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+
+
+def forward_train(params: Params, cfg: ModelConfig, call: CallConfig,
+                  batch: Dict) -> Tuple[jax.Array, jax.Array]:
+    """batch: tokens [B,S] (or frame_emb [B,S,D]), optional vision_mem [B,M,D].
+    Returns (logits [B,S,V] fp32, aux_loss scalar)."""
+    kinds = cfg.layer_kinds()[:cfg.block_period]
+    x, mem = _embed(params, cfg, call, batch)
+    x = constrain_act(x, call)
+    positions = jnp.arange(x.shape[1])
+
+    def block_body(x, block_params):
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(kinds):
+            x, _, a = _apply_layer(cfg, call, kind, block_params[i], x,
+                                   positions=positions, mem=mem, cache=None,
+                                   max_seq=None, use_kernel_scan=False)
+            x = constrain_act(x, call)
+            aux = aux + a
+        return x, aux
+
+    body = block_body
+    if call.remat:
+        body = jax.checkpoint(block_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(x, bp):
+        return body(x, bp)
+
+    x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, call)
+    return _head(params, cfg, x), jnp.sum(auxs)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, call: CallConfig,
+            batch: Dict) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Vocab-shard-friendly cross entropy: every reduction over V is a
+    partial-sum + tiny all-reduce under SPMD — the full [B,S,V] logits are
+    never gathered onto one device (the head is TP-sharded on V)."""
+    logits, aux = forward_train(params, cfg, call, batch)
+    labels = batch["labels"]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(jnp.where(iota == labels[..., None], shifted, 0.0),
+                     axis=-1)
+    nll = lse - picked
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    nll = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    zloss = 1e-4 * jnp.mean((lse + m[..., 0]) ** 2)
+    total = nll + aux + zloss
+    return total, {"nll": nll, "aux": aux, "zloss": zloss}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> list:
+    """Per super-block-position state, stacked over repeats R."""
+    period = cfg.block_period
+    repeats = cfg.n_layers // period
+    kinds = cfg.layer_kinds()[:period]
+
+    def one(kind):
+        if kind == "attn":
+            return {
+                "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+        if kind == "mamba":
+            return ssm.mamba_init_state(cfg, batch, dtype)
+        if kind == "mlstm":
+            return ssm.mlstm_init_state(cfg, batch, dtype)
+        if kind == "slstm":
+            return ssm.slstm_init_state(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    return [jax.tree.map(lambda a: jnp.broadcast_to(a, (repeats,) + a.shape),
+                         one(k)) for k in kinds]
+
+
+def forward_decode(params: Params, cfg: ModelConfig, call: CallConfig,
+                   batch: Dict, cache: list, pos: jax.Array
+                   ) -> Tuple[jax.Array, list]:
+    """One decode step. batch: tokens [B] (or frame_emb [B,1,D]), optional
+    vision_mem. pos: scalar int32 — the position being written.
+    Returns (logits [B,V] fp32, new cache)."""
+    kinds = cfg.layer_kinds()[:cfg.block_period]
+    if cfg.embed_inputs:
+        x = params["embed"][batch["tokens"][:, None]]
+    else:
+        x = batch["frame_emb"]
+    x = x.astype(call.compute_dtype)
+    mem = batch.get("vision_mem")
+    if mem is not None:
+        mem = mem.astype(call.compute_dtype)
+    positions = pos.astype(jnp.int32)
+
+    def scan_body(x, xs):
+        block_params, block_cache = xs
+        new_cache = []
+        for i, kind in enumerate(kinds):
+            x, nc, _ = _apply_layer(cfg, call, kind, block_params[i], x,
+                                    positions=positions, mem=mem,
+                                    cache=block_cache[i], max_seq=None,
+                                    use_kernel_scan=False)
+            new_cache.append(nc)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, call)
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts MLP: top-k token-choice routing with capacity-based
+grouped dispatch (Mesh-TF style — dense one-hot einsums, TPU friendly),
+optional parallel dense residual (arctic).
+
+Experts are sharded over the ``model`` mesh axis (EP); dispatch/combine
+einsums lower to all-to-alls under SPMD.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_mlp, swiglu
+
+
+def init_moe(cfg: ModelConfig, key):
+    m = cfg.moe
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    p = {
+        "router": jax.random.normal(k1, (d, e)) * d ** -0.5,
+        "w_gate": jax.random.normal(k2, (e, d, f)) * d ** -0.5,
+        "w_up": jax.random.normal(k3, (e, d, f)) * d ** -0.5,
+        "w_down": jax.random.normal(k4, (e, f, d)) * f ** -0.5,
+    }
+    if m.dense_residual:
+        p["dense"] = init_mlp(cfg, k5, m.dense_d_ff)
+    return p
+
+
+def _capacity(group_size: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(group_size * top_k / n_experts * factor)
+    return max(4, -(-c // 4) * 4)      # round up to multiple of 4
+
+
+def moe_mlp(p, x, *, cfg: ModelConfig, group_size: int = 1024,
+            ep_axis=None, tok_axes=()) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,D] -> (y, aux_loss). Tokens are processed in groups so the
+    dispatch one-hots stay small ([G, S_g, E, C]). ``ep_axis`` switches on
+    explicit expert parallelism over that mesh axis: dispatch is computed
+    *locally* (groups sharded over ``tok_axes``), then a single resharding
+    (g-sharded -> e-sharded) lowers to the EP all-to-all."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    g_sz = min(group_size, n_tok)
+    assert n_tok % g_sz == 0, (n_tok, g_sz)
+    xg = x.reshape(n_tok // g_sz, g_sz, d)                  # [G, Sg, D]
+    cap = _capacity(g_sz, m.n_experts, m.top_k, m.capacity_factor)
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, m.top_k)              # [G,Sg,K]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # position-in-expert via cumsum over (slot-major) one-hots
+    onehot = jax.nn.one_hot(topi, m.n_experts, dtype=jnp.float32)  # [G,Sg,K,E]
+    # flatten (token, k) slots in priority order: k-major so top-1 wins capacity
+    slots = onehot.transpose(0, 2, 1, 3).reshape(xg.shape[0], -1, m.n_experts)
+    pos_in_e = (jnp.cumsum(slots, axis=1) - slots)          # [G, K*Sg, E]
+    pos_in_e = pos_in_e.reshape(xg.shape[0], m.top_k, g_sz, m.n_experts)
+    pos_in_e = pos_in_e.transpose(0, 2, 1, 3)               # [G,Sg,K,E]
+    in_cap = pos_in_e < cap
+    keep = onehot * in_cap                                   # [G,Sg,K,E]
+    pos = jnp.einsum("gske,gske->gsk", pos_in_e, keep)      # slot index
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32) \
+        * keep.sum(-1, keepdims=True)                        # [G,Sg,K,C]
+    # dispatch/combine tensors
+    disp = jnp.einsum("gske,gskc->gsec", keep, cap_oh)      # [G,Sg,E,C] 0/1
+    comb = jnp.einsum("gske,gskc,gsk->gsec", keep, cap_oh, topv)
+    dt = x.dtype
+
+    def _wsc(t, spec):
+        from jax.sharding import PartitionSpec as P
+        try:
+            return jax.lax.with_sharding_constraint(t, P(*spec))
+        except Exception:
+            return t
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg, disp.astype(dt))  # [G,E,C,D]
+    if ep_axis is not None:
+        # 1) dispatch stays token-local (groups sharded over tok_axes)
+        xe = _wsc(xe, (tok_axes or None, None, None, None))
+        # 2) reshard g-sharded -> e-sharded: the EP all-to-all
+        xe = _wsc(xe, (None, ep_axis, None, None))
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u, p["w_down"])
+    if ep_axis is not None:
+        ye = _wsc(ye, (None, ep_axis, None, None))
+        # return all-to-all before the token-local combine
+        ye = _wsc(ye, (tok_axes or None, None, None, None))
+    y = jnp.einsum("gecd,gsec->gsd", ye, comb.astype(dt)).reshape(b, s, d)
+
+    # aux losses: load-balance (Switch) + router z-loss
+    me = probs.mean(axis=(0, 1))                            # [E]
+    ce = onehot.sum(2).mean(axis=(0, 1))                    # fraction routed
+    aux = m.aux_loss * m.n_experts * jnp.sum(me * ce)
+    zl = m.router_z_loss * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    if m.dense_residual:
+        y = y + swiglu(p["dense"], x)
+    return y, (aux + zl).astype(jnp.float32)

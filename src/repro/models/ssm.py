@@ -1,0 +1,465 @@
+"""SSM mixers: Mamba selective scan, xLSTM mLSTM (matrix memory) and sLSTM.
+
+Design notes (TPU adaptation):
+- Mamba train path scans over chunks; within a chunk the recurrence runs as an
+  associative scan on [B, L, Di, N] in fp32 — live memory is bounded by the
+  chunk, never [B, S, Di, N]. The Pallas ``ssm_scan`` kernel implements the
+  same contraction with the state resident in VMEM.
+- mLSTM train path is the chunked linear-attention form with log-space
+  gates: intra-chunk [L, L] decay-weighted scores + inter-chunk matrix state
+  [dk, dv], with a cummax stabilizer (exponential input gate, sigmoid forget).
+- sLSTM is inherently sequential (recurrent head mixing) -> lax.scan over S.
+All mixers expose: init_*, *_forward (train), *_init_state, *_decode.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+def init_mamba(cfg: ModelConfig, key):
+    s = cfg.ssm
+    d, di, n, k = cfg.d_model, cfg.ssm.expand * cfg.d_model, s.d_state, s.d_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (k, di)) * 0.2,
+        "conv_b": jnp.zeros((di,)),
+        "w_bc": jax.random.normal(ks[2], (di, 2 * n)) * di ** -0.5,
+        "w_dt": jax.random.normal(ks[3], (di, 1)) * di ** -0.5,
+        "dt_bias": jnp.full((di,), -3.0),     # softplus^-1(~0.05)
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                          (di, n)) + 0.0),
+        "D": jnp.ones((di,)),
+        "w_out": jax.random.normal(ks[4], (di, d)) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [B,S,Di], w: [K,Di] depthwise causal conv."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        shift = k - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs * w[j]
+    return out + b
+
+
+def _ssm_chunk_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1.
+    a, b: [B, L, Di, N] fp32; h0: [B, Di, N]. Returns (h_all, h_last)."""
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return b_c, b_c[:, -1]
+
+
+def mamba_ssm(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+              A: jax.Array, D: jax.Array, chunk: int, h0: jax.Array = None,
+              use_kernel: bool = False) -> jax.Array:
+    """Selective scan core. x, dt: [B,S,Di]; B, C: [B,S,N]; A: [Di,N]; D: [Di]."""
+    if use_kernel:
+        from repro.kernels.ssm_scan.ops import ssm_scan
+        return ssm_scan(x, dt, B, C, A, D)
+    if h0 is None and x.shape[1] % chunk == 0:
+        return _selective_scan(x, dt, B, C, A, D, chunk)
+    bsz, s, di = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    xp, dtp, Bp, Cp = (jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                       for t in (x, dt, B, C))
+
+    def body(h, xs):
+        xc, dtc, Bc, Cc = xs                                 # [B,L,...]
+        dtf = dtc.astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * A)                      # [B,L,Di,N]
+        bmat = (dtf * xc.astype(jnp.float32))[..., None] * Bc[:, :, None, :].astype(jnp.float32)
+        h_all, h_last = _ssm_chunk_scan(a, bmat, h)
+        y = jnp.einsum("blin,bln->bli", h_all, Cc.astype(jnp.float32))
+        return h_last, y.astype(x.dtype)
+
+    xs = tuple(t.reshape(bsz, nchunk, chunk, *t.shape[2:]).swapaxes(0, 1)
+               for t in (xp, dtp, Bp, Cp))
+    _, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, nchunk * chunk, di)[:, :s]
+    return y + x * D
+
+
+# ---- custom VJP: backward recomputes within-chunk states from saved
+# chunk-boundary states only ([B, S/L, Di, N] residuals, never [B,S,Di,N]) —
+# the TPU analogue of the fused CUDA selective-scan backward.
+
+def _chunks(t, nchunk, chunk):
+    return t.reshape(t.shape[0], nchunk, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+
+def _ssm_fwd_core(x, dt, B, C, A, D, chunk):
+    bsz, s, di = x.shape
+    n = A.shape[1]
+    nchunk = s // chunk
+
+    def body(h, xs):
+        xc, dtc, Bc, Cc = xs
+        dtf = dtc.astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * A)
+        bmat = (dtf * xc.astype(jnp.float32))[..., None] * \
+            Bc[:, :, None, :].astype(jnp.float32)
+        h_all, h_last = _ssm_chunk_scan(a, bmat, h)
+        y = jnp.einsum("blin,bln->bli", h_all, Cc.astype(jnp.float32))
+        return h_last, (y.astype(x.dtype), h)
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    xs = tuple(_chunks(t, nchunk, chunk) for t in (x, dt, B, C))
+    _, (ys, h_starts) = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s, di) + x * D
+    return y, h_starts                       # h_starts: [nchunk, B, Di, N]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _selective_scan(x, dt, B, C, A, D, chunk):
+    y, _ = _ssm_fwd_core(x, dt, B, C, A, D, chunk)
+    return y
+
+
+def _sel_fwd(x, dt, B, C, A, D, chunk):
+    y, h_starts = _ssm_fwd_core(x, dt, B, C, A, D, chunk)
+    return y, (x, dt, B, C, A, D, h_starts)
+
+
+def _sel_bwd(chunk, res, dy):
+    x, dt, B, C, A, D, h_starts = res
+    bsz, s, di = x.shape
+    n = A.shape[1]
+    nchunk = s // chunk
+    Af = A.astype(jnp.float32)
+
+    xs = tuple(_chunks(t, nchunk, chunk) for t in (x, dt, B, C, dy))
+
+    def body(carry, inp):
+        dh_carry, dA_acc = carry             # dh_carry = a_next1 * dh_next1
+        xc, dtc, Bc, Cc, dyc, hs = inp
+        dtf = dtc.astype(jnp.float32)
+        xf = xc.astype(jnp.float32)
+        Bf = Bc[:, :, None, :].astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * Af)                     # [B,L,Di,N]
+        bmat = (dtf * xf)[..., None] * Bf
+        h_all, _ = _ssm_chunk_scan(a, bmat, hs)              # recompute
+        h_prev = jnp.concatenate([hs[:, None], h_all[:, :-1]], axis=1)
+        g = dyc.astype(jnp.float32)[..., None] * \
+            Cc[:, :, None, :].astype(jnp.float32)            # [B,L,Di,N]
+        g = g.at[:, -1].add(dh_carry)
+        # reverse scan: dh_t = g_t + a_{t+1} dh_{t+1}
+        a_shift = jnp.concatenate([a[:, 1:],
+                                   jnp.zeros_like(a[:, :1])], axis=1)
+        ar = jnp.flip(a_shift, axis=1)
+        gr = jnp.flip(g, axis=1)
+
+        def comb(u, w):
+            a1, b1 = u
+            a2, b2 = w
+            return a1 * a2, a2 * b1 + b2
+
+        _, dh_r = jax.lax.associative_scan(comb, (ar, gr), axis=1)
+        dh = jnp.flip(dh_r, axis=1)                          # [B,L,Di,N]
+        ddt = jnp.sum(dh * (a * Af * h_prev + (xf[..., None] * Bf)), axis=3)
+        dx = jnp.sum(dh * dtf[..., None] * Bf, axis=3)
+        dB = jnp.sum(dh * (dtf * xf)[..., None], axis=2)     # [B,L,N]
+        dC = jnp.sum(dyc.astype(jnp.float32)[..., None] * h_all, axis=2)
+        dA_acc = dA_acc + jnp.sum(dh * a * dtf[..., None] * h_prev,
+                                  axis=(0, 1))
+        dh_carry_out = a[:, 0] * dh[:, 0]
+        return (dh_carry_out, dA_acc), (ddt, dx, dB, dC)
+
+    dh0 = jnp.zeros((bsz, di, n), jnp.float32)
+    dA0 = jnp.zeros((di, n), jnp.float32)
+    rev = tuple(jnp.flip(t, axis=0) for t in (*xs, h_starts))
+    (_, dA), (ddt_r, dx_r, dB_r, dC_r) = jax.lax.scan(
+        body, (dh0, dA0), rev)
+
+    def unrev(t):
+        return jnp.flip(t, axis=0).swapaxes(0, 1).reshape(bsz, s, -1)
+
+    ddt = unrev(ddt_r)
+    dx = unrev(dx_r) + dy.astype(jnp.float32) * D
+    dB = unrev(dB_r)
+    dC = unrev(dC_r)
+    dD = jnp.sum(dy.astype(jnp.float32) * x.astype(jnp.float32), axis=(0, 1))
+    return (dx.astype(x.dtype), ddt.astype(dt.dtype), dB.astype(B.dtype),
+            dC.astype(C.dtype), dA.astype(A.dtype), dD.astype(D.dtype))
+
+
+_selective_scan.defvjp(_sel_fwd, _sel_bwd)
+
+
+def mamba_forward(p, x, *, cfg: ModelConfig, use_kernel: bool = False) -> jax.Array:
+    """x: [B,S,D] -> [B,S,D]."""
+    s_cfg = cfg.ssm
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    bc = jnp.einsum("bsi,ie->bse", xc, p["w_bc"])
+    B, C = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsi,ie->bse", xc, p["w_dt"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = mamba_ssm(xc, dt, B, C, A, p["D"], s_cfg.chunk, use_kernel=use_kernel)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"])
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di = cfg.ssm.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, state, *, cfg: ModelConfig):
+    """x: [B,1,D] -> (y [B,1,D], state)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    win = jnp.concatenate([state["conv"], xin], axis=1)      # [B,K,Di]
+    xc = jax.nn.silu(jnp.einsum("bki,ki->bi", win, p["conv_w"]) + p["conv_b"])[:, None]
+    new_conv = win[:, 1:]
+    bc = jnp.einsum("bsi,ie->bse", xc, p["w_bc"])
+    B, C = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsi,ie->bse", xc, p["w_dt"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                        # [B,Di]
+    a = jnp.exp(dtf[..., None] * A)                           # [B,Di,N]
+    bmat = (dtf * xc[:, 0].astype(jnp.float32))[..., None] * B[:, 0, None, :].astype(jnp.float32)
+    h = a * state["h"] + bmat
+    y = jnp.einsum("bin,bn->bi", h, C[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = (y + xc[:, 0] * p["D"])[:, None] * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"]), {"conv": new_conv, "h": h}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix memory) — chunked linear attention with log-space gates
+# ===========================================================================
+
+def init_mlstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": jax.random.normal(ks[0], (d, di)) * d ** -0.5,
+        "wk": jax.random.normal(ks[1], (d, di)) * d ** -0.5,
+        "wv": jax.random.normal(ks[2], (d, di)) * d ** -0.5,
+        "w_i": jax.random.normal(ks[3], (d, h)) * d ** -0.5,
+        "b_i": jnp.zeros((h,)),
+        "w_f": jax.random.normal(ks[4], (d, h)) * d ** -0.5,
+        "b_f": jnp.full((h,), 3.0),           # open forget gate at init
+        "w_og": jax.random.normal(ks[5], (d, di)) * d ** -0.5,
+        "b_og": jnp.zeros((di,)),
+        "w_out": jax.random.normal(ks[6], (di, d)) * di ** -0.5,
+    }
+
+
+def _mlstm_gates(p, x):
+    log_i = jnp.einsum("bsd,dh->bsh", x, p["w_i"]).astype(jnp.float32) + p["b_i"]
+    f_raw = jnp.einsum("bsd,dh->bsh", x, p["w_f"]).astype(jnp.float32) + p["b_f"]
+    log_f = -jax.nn.softplus(-f_raw)          # log sigmoid — bounded <= 0
+    return log_i, log_f
+
+
+def mlstm_forward(p, x, *, cfg: ModelConfig) -> jax.Array:
+    """Chunked mLSTM. x: [B,S,D]."""
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    di = 2 * d
+    dh = di // h
+    L = min(cfg.ssm.chunk, s)
+    assert s % L == 0, (s, L)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(bsz, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(bsz, s, h, dh) / jnp.sqrt(jnp.float32(dh)).astype(x.dtype)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(bsz, s, h, dh)
+    log_i, log_f = _mlstm_gates(p, x)          # [B,S,H]
+
+    nchunk = s // L
+    qc = q.reshape(bsz, nchunk, L, h, dh).swapaxes(0, 1)
+    kc = k.reshape(bsz, nchunk, L, h, dh).swapaxes(0, 1)
+    vc = v.reshape(bsz, nchunk, L, h, dh).swapaxes(0, 1)
+    ic = log_i.reshape(bsz, nchunk, L, h).swapaxes(0, 1)
+    fc = log_f.reshape(bsz, nchunk, L, h).swapaxes(0, 1)
+
+    def body(carry, xs):
+        C, n, m = carry                        # [B,H,dk,dv], [B,H,dk], [B,H]
+        qb, kb, vb, ib, fb = xs
+        cf = jnp.cumsum(fb, axis=1)            # [B,L,H] cumulative log f
+        g = ib - cf                            # [B,L,H]
+        gmax = jax.lax.cummax(g, axis=1)
+        m_t = cf + jnp.maximum(m[:, None], gmax)        # [B,L,H]
+        # intra-chunk decay-weighted scores
+        w_log = (cf[:, :, None] - cf[:, None, :] + ib[:, None, :, :]
+                 - m_t[:, :, None])            # [B,L(t),L(tau),H]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(w_log), 0.0)
+        qk = jnp.einsum("blhe,bthe->blth", qb.astype(jnp.float32),
+                        kb.astype(jnp.float32))
+        num_intra = jnp.einsum("blth,blth,bthe->blhe", qk, w,
+                               vb.astype(jnp.float32))
+        den_intra = jnp.einsum("blth,blth->blh", qk, w)
+        # inter-chunk (initial state) contribution
+        scale = jnp.exp(m[:, None] + cf - m_t)           # [B,L,H]
+        qC = jnp.einsum("blhe,bhef->blhf", qb.astype(jnp.float32), C)
+        num = num_intra + scale[..., None] * qC
+        den = den_intra + scale * jnp.einsum("blhe,bhe->blh",
+                                             qb.astype(jnp.float32), n)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # end-of-chunk state
+        m_new = m_t[:, -1]                     # [B,H]
+        s_dec = jnp.exp(m[:, None] + cf[:, -1:] - m_new[:, None])[:, 0]  # [B,H]
+        k_w = jnp.exp(cf[:, -1:, :] - cf + ib - m_new[:, None])          # [B,L,H]
+        C_new = s_dec[..., None, None] * C + jnp.einsum(
+            "blh,blhe,blhf->bhef", k_w, kb.astype(jnp.float32),
+            vb.astype(jnp.float32))
+        n_new = s_dec[..., None] * n + jnp.einsum(
+            "blh,blhe->bhe", k_w, kb.astype(jnp.float32))
+        return (C_new, n_new, m_new), y.astype(x.dtype)
+
+    C0 = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((bsz, h, dh), jnp.float32)
+    m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, di)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_og"]) + p["b_og"])
+    return jnp.einsum("bsi,id->bsd", y * og, p["w_out"])
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    h = cfg.n_heads
+    dh = 2 * cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, state, *, cfg: ModelConfig):
+    """x: [B,1,D]."""
+    bsz, _, d = x.shape
+    h = cfg.n_heads
+    di = 2 * d
+    dh = di // h
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(bsz, h, dh).astype(jnp.float32)
+    k = (jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(bsz, h, dh)
+         / jnp.sqrt(jnp.float32(dh))).astype(jnp.float32)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(bsz, h, dh).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(p, x)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]    # [B,H]
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + state["m"] - m_new)
+    C = f_p[..., None, None] * state["C"] + i_p[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_p[..., None] * state["n"] + i_p[..., None] * k
+    num = jnp.einsum("bhe,bhef->bhf", q, C)
+    den = jnp.einsum("bhe,bhe->bh", q, n)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_og"]) + p["b_og"])
+    out = jnp.einsum("bsi,id->bsd", y * og, p["w_out"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM — sequential scalar LSTM with exponential gating + head mixing
+# ===========================================================================
+
+def init_slstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.n_heads
+    dh = di // h
+    ks = jax.random.split(key, 6)
+    p = {"w_out": jax.random.normal(ks[4], (di, d)) * di ** -0.5}
+    for name, kk in zip(("i", "f", "z", "o"), jax.random.split(ks[0], 4)):
+        p[f"w_{name}"] = jax.random.normal(kk, (d, di)) * d ** -0.5
+        p[f"b_{name}"] = jnp.full((di,), 3.0) if name == "f" else jnp.zeros((di,))
+    for name, kk in zip(("i", "f", "z", "o"), jax.random.split(ks[1], 4)):
+        p[f"r_{name}"] = jax.random.normal(kk, (h, dh, dh)) * dh ** -0.5
+    return p
+
+
+def _slstm_step(p, h_cfg, carry, xproj):
+    """carry: (c, n, h, m) each [B,Di]; xproj: dict of [B,Di] projections."""
+    nheads, dh = h_cfg
+    c, n, hh, m = carry
+    hheads = hh.reshape(hh.shape[0], nheads, dh)
+
+    def rec(name):
+        return jnp.einsum("bhe,hef->bhf", hheads,
+                          p[f"r_{name}"].astype(hh.dtype)).reshape(hh.shape)
+
+    i_raw = (xproj["i"] + rec("i")).astype(jnp.float32)
+    f_raw = (xproj["f"] + rec("f")).astype(jnp.float32)
+    z = jnp.tanh((xproj["z"] + rec("z")).astype(jnp.float32))
+    o = jax.nn.sigmoid((xproj["o"] + rec("o")).astype(jnp.float32))
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = (o * c_new / jnp.maximum(n_new, 1.0)).astype(hh.dtype)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p, x, *, cfg: ModelConfig) -> jax.Array:
+    bsz, s, d = x.shape
+    di = 2 * d
+    h, dh = cfg.n_heads, di // cfg.n_heads
+    xproj = {name: jnp.einsum("bsd,de->bse", x, p[f"w_{name}"]) + p[f"b_{name}"]
+             for name in ("i", "f", "z", "o")}
+    c0 = jnp.zeros((bsz, di), jnp.float32)
+    st0 = (c0, c0, jnp.zeros((bsz, di), x.dtype), jnp.full((bsz, di), -1e30, jnp.float32))
+
+    def body(carry, xs):
+        return _slstm_step(p, (h, dh), carry, xs)
+
+    xs = {k_: v.swapaxes(0, 1) for k_, v in xproj.items()}   # [S,B,Di]
+    _, hs = jax.lax.scan(body, st0, xs)
+    y = hs.swapaxes(0, 1)                                    # [B,S,Di]
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"])
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di = 2 * cfg.d_model
+    return {
+        "c": jnp.zeros((batch, di), jnp.float32),
+        "n": jnp.zeros((batch, di), jnp.float32),
+        "h": jnp.zeros((batch, di), dtype),
+        "m": jnp.full((batch, di), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(p, x, state, *, cfg: ModelConfig):
+    di = 2 * cfg.d_model
+    h, dh = cfg.n_heads, di // cfg.n_heads
+    xproj = {name: jnp.einsum("bsd,de->bse", x, p[f"w_{name}"])[:, 0] + p[f"b_{name}"]
+             for name in ("i", "f", "z", "o")}
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, hh, m), y = _slstm_step(p, (h, dh), carry, xproj)
+    out = jnp.einsum("bsi,id->bsd", y[:, None], p["w_out"])
+    return out, {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,137 @@
+"""AdamW with optional block-quantized int8 moments (memory-critical for the
+>=100B MoE archs: 2 bytes/param of optimizer state instead of 8) and an
+error-feedback int8 gradient compressor for the DP all-reduce.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256          # DP gradient-compression block (flat)
+QUANT_MIN_SIZE = 1 << 22   # quantize moments only for leaves >= 4M params
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_state: bool = False      # int8 m/v (row-scaled)
+    warmup_steps: int = 100
+
+
+def _q8_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantize along the param's own last dim (per-row absmax scales) —
+    the int8 state keeps the param's SHAPE, so it inherits the param's
+    sharding and the update math never regathers moments (EXPERIMENTS.md
+    §Perf, arctic iteration 4: misaligned flat blocks forced XLA to
+    all-gather ~6 TB of dequantized fp32 moments per step)."""
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(x / jnp.maximum(s, 1e-12)).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def _dq8_rows(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * s
+
+
+def _quantizable(p) -> bool:
+    return p.size >= QUANT_MIN_SIZE and p.ndim >= 1
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> Dict[str, Any]:
+    def zeros_like_q(p):
+        if cfg.quantized_state and _quantizable(p):
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "s": jnp.zeros(p.shape[:-1] + (1,), jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_q, params),
+        "v": jax.tree.map(zeros_like_q, params),
+    }
+
+
+def _load(cfg: AdamWConfig, slot, p):
+    if isinstance(slot, dict):
+        return _dq8_rows(slot["q"], slot["s"])
+    return slot
+
+
+def _store(cfg: AdamWConfig, val, like):
+    if isinstance(like, dict):
+        q, s = _q8_rows(val)
+        return {"q": q, "s": s}
+    return val
+
+
+def global_norm(grads) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, opt_state
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    warm = jnp.minimum(1.0, step.astype(jnp.float32) / cfg.warmup_steps)
+    lr = cfg.lr * warm
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m0, v0 in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _load(cfg, m0, p) + (1 - cfg.b1) * g
+        v = cfg.b2 * _load(cfg, v0, p) + (1 - cfg.b2) * g * g
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(_store(cfg, m, m0))
+        new_v.append(_store(cfg, v, v0))
+    params = jax.tree.unflatten(treedef, new_p)
+    opt_state = {"step": step, "m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v)}
+    return params, opt_state, {"grad_norm": gn, "lr": lr}
+
+
+# ---- int8 error-feedback gradient compression (DP axis) --------------------
+
+def _q8_flat(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8_flat(q, scale, shape, size):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def compress_grad(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (int8 q, scales, new_error). all-reduce q (cheap), correct
+    locally with error feedback next step."""
+    corrected = g.astype(jnp.float32) + err
+    q, s = _q8_flat(corrected)
+    deq = _dq8_flat(q, s, g.shape, g.size)
+    return q, s, corrected - deq
+
+
+def decompress_grad(q: jax.Array, s: jax.Array, shape, size: int) -> jax.Array:
+    return _dq8_flat(q, s, shape, size)
