@@ -5,6 +5,10 @@ us_per_call is the median request latency in microseconds and derived packs
 protocol/rate/throughput. Simulations are scaled from the paper's 60 s runs
 to a few seconds (5x5 deployment unchanged); EXPERIMENTS.md compares against
 the paper's headline numbers.
+
+Every sweep goes through the batched experiment engine
+(repro.core.experiment.run_sweep): one vmapped device dispatch per
+protocol instead of one retraced scan per grid point.
 """
 from __future__ import annotations
 
@@ -15,7 +19,7 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.configs.smr import PAPER_CLAIMS, SMRConfig
-from repro.core.harness import run_sim
+from repro.core.experiment import SweepSpec, run_sweep
 from repro.core.netsim import FaultSchedule
 
 ART = Path(__file__).resolve().parent / "artifacts"
@@ -29,7 +33,8 @@ def _row(name: str, med_ms: float, **derived) -> Row:
 
 
 def fig6_throughput_latency(sim_seconds: float = 4.0) -> List[Row]:
-    """Best-case WAN performance, 5 replicas (Fig. 6)."""
+    """Best-case WAN performance, 5 replicas (Fig. 6). Each protocol's rate
+    sweep runs as one batched grid."""
     cfg = SMRConfig(sim_seconds=sim_seconds)
     sweeps = {
         "mandator-sporades": [50_000, 150_000, 300_000, 450_000],
@@ -42,9 +47,9 @@ def fig6_throughput_latency(sim_seconds: float = 4.0) -> List[Row]:
     results = {}
     for proto, rates in sweeps.items():
         best = 0.0
-        for rate in rates:
-            r = run_sim(proto, cfg, rate_tx_s=rate)
-            rows.append(_row(f"fig6/{proto}@{rate}", r["median_ms"],
+        for r in run_sweep(proto, cfg, SweepSpec(rates=tuple(rates))):
+            rows.append(_row(f"fig6/{proto}@{round(r['rate'])}",
+                             r["median_ms"],
                              tput=round(r["throughput"]),
                              p99_ms=round(r["p99_ms"], 1)))
             # saturation throughput under the paper's ~1s (5s DDoS) bound
@@ -60,12 +65,13 @@ def fig7_crash(sim_seconds: float = 4.0) -> List[Row]:
     cfg = SMRConfig(sim_seconds=sim_seconds)
     crash = np.full(5, np.inf)
     crash[0] = sim_seconds / 2          # leader of view 0
+    spec = SweepSpec(rates=(100_000,),
+                     faults=(FaultSchedule(crash_time_s=crash),))
     rows: List[Row] = []
     out = {}
     for proto in ("mandator-sporades", "mandator-paxos"):
-        r = run_sim(proto, cfg, rate_tx_s=100_000,
-                    faults=FaultSchedule(crash_time_s=crash))
-        tl = [round(x) for x in r["timeline"]]
+        r = run_sweep(proto, cfg, spec)[0]
+        tl = [round(float(x)) for x in r["timeline"]]
         out[proto] = tl
         post = np.asarray(r["timeline"])[-2:]
         rows.append(_row(f"fig7/{proto}", r["median_ms"],
@@ -88,11 +94,12 @@ def fig8_ddos(sim_seconds: float = 4.0) -> List[Row]:
                         ("epaxos", 10_000)):
         if proto == "epaxos":
             # analytic baseline: DDoS modeled as doubled effective RTTs
-            r = run_sim(proto, cfg, rate_tx_s=rate)
+            r = run_sweep(proto, cfg, SweepSpec(rates=(rate,)))[0]
             r["throughput"] *= 0.5
             r["median_ms"] *= 2.0
         else:
-            r = run_sim(proto, cfg, rate_tx_s=rate, faults=faults)
+            r = run_sweep(proto, cfg,
+                          SweepSpec(rates=(rate,), faults=(faults,)))[0]
         out[proto] = {"tput": r["throughput"], "med_ms": r["median_ms"]}
         rows.append(_row(f"fig8/{proto}", r["median_ms"],
                          tput=round(r["throughput"])))
@@ -101,12 +108,14 @@ def fig8_ddos(sim_seconds: float = 4.0) -> List[Row]:
 
 
 def fig9_scalability(sim_seconds: float = 3.0) -> List[Row]:
-    """3 -> 9 replicas, Mandator-Sporades (Fig. 9)."""
+    """3 -> 9 replicas, Mandator-Sporades (Fig. 9). Replica count changes the
+    array shapes, so each n is its own compiled program (cfg is static)."""
     rows: List[Row] = []
     out = {}
     for n in (3, 5, 7, 9):
         cfg = SMRConfig(n_replicas=n, sim_seconds=sim_seconds)
-        r = run_sim("mandator-sporades", cfg, rate_tx_s=60_000 * n)
+        r = run_sweep("mandator-sporades", cfg,
+                      SweepSpec(rates=(60_000 * n,)))[0]
         out[n] = {"tput": r["throughput"], "med_ms": r["median_ms"]}
         rows.append(_row(f"fig9/n={n}", r["median_ms"],
                          tput=round(r["throughput"])))

@@ -1,6 +1,11 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``.
 """Benchmark driver:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6,roofline,...]
+
+Figure suites dispatch through the batched experiment engine
+(repro.core.experiment): each protocol's whole rate grid compiles once and
+runs as a single vmapped program; the per-suite stderr line reports
+wall-clock and the cumulative jit-trace count.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from benchmarks import figures  # noqa: E402
 from benchmarks import roofline  # noqa: E402
 from benchmarks.bench_kernels import bench as kernel_bench  # noqa: E402
+from repro.core import experiment  # noqa: E402
 
 
 def main() -> None:
@@ -26,7 +32,6 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     figures.ART.mkdir(parents=True, exist_ok=True)
-    rows = []
     suites = {
         "fig6": lambda: figures.fig6_throughput_latency(sim_s),
         "fig7": lambda: figures.fig7_crash(sim_s),
@@ -47,7 +52,9 @@ def main() -> None:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
-        print(f"# {name} done in {time.time() - t0:.0f}s", file=sys.stderr)
+        traces = sum(experiment.trace_counts().values())
+        print(f"# {name} done in {time.time() - t0:.0f}s "
+              f"(sweep traces so far: {traces})", file=sys.stderr)
     roofline.main()
 
 

@@ -2,6 +2,9 @@
 the simulated 5-region WAN; reproduce the Fig. 6 ordering and the Fig. 7
 leader-crash recovery.
 
+Sweeps go through the batched experiment engine: each protocol's rate grid
+is one compiled vmapped program (see docs/ARCHITECTURE.md).
+
   PYTHONPATH=src python examples/wan_consensus_demo.py
 """
 import sys
@@ -12,7 +15,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 from repro.configs.smr import SMRConfig
-from repro.core.harness import run_sim
+from repro.core.experiment import SweepSpec, run_sweep
 from repro.core.netsim import FaultSchedule
 
 
@@ -25,16 +28,17 @@ def main() -> None:
                         ("multipaxos", 100_000),
                         ("epaxos", 10_000),
                         ("rabia", 1_000)):
-        r = run_sim(proto, cfg, rate_tx_s=rate)
+        r = run_sweep(proto, cfg, SweepSpec(rates=(rate,)))[0]
         print(f" {proto:20s} saturation ~{r['throughput']:8.0f} tx/s "
               f"@ {r['median_ms']:6.0f} ms median")
 
     print("\n== leader crash at t=1.5s (Fig. 7) ==")
     crash = np.full(5, np.inf)
     crash[0] = 1.5
+    spec = SweepSpec(rates=(100_000,),
+                     faults=(FaultSchedule(crash_time_s=crash),))
     for proto in ("mandator-sporades", "mandator-paxos"):
-        r = run_sim(proto, cfg, rate_tx_s=100_000,
-                    faults=FaultSchedule(crash_time_s=crash))
+        r = run_sweep(proto, cfg, spec)[0]
         tl = "|".join(f"{x/1000:.0f}k" for x in r["timeline"])
         print(f" {proto:20s} [{tl}] tx/s per 500ms")
 

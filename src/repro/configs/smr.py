@@ -65,6 +65,12 @@ class SMRConfig:
     view_timeout_ms: float = 300.0     # sporades/paxos view-change timeout
     sim_seconds: float = 10.0
     tick_ms: float = 1.0
+    # Delayed-delivery horizon (ring-buffer slots) of the simulated channels:
+    # a message's total delay (link + DDoS + NIC backlog) is capped at
+    # horizon-1 ticks. 2048 covers the worst §5.5 attack (800ms + 163ms max
+    # link, 1ms ticks) with ~1s of queueing headroom; per-tick channel cost
+    # is linear in the horizon, so don't oversize it.
+    delay_horizon_ticks: int = 2048
 
     def delays_ms(self) -> np.ndarray:
         return one_way_delay_ms(self.n_replicas)

@@ -7,10 +7,16 @@ Protocols:
   multipaxos         — monolithic Multi-Paxos (batches inside consensus)
   mandator           — dissemination layer alone (completion throughput)
   epaxos / rabia     — analytic baselines (see docstrings in epaxos.py/rabia.py)
+
+Everything here is traceable end-to-end: ``sim_point`` runs the tick-level
+``jax.lax.scan`` AND extracts the metrics on-device (searchsorted commit
+reconstruction, weighted quantiles, timeline histogram), so the batched
+experiment engine (core/experiment.py) can ``jax.vmap`` a whole
+rate × seed × fault grid into one compiled program. ``run_sim`` is a thin
+single-point wrapper over that engine, kept for backward compatibility.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict, Optional
 
 import jax
@@ -21,10 +27,14 @@ from repro.configs.smr import SMRConfig
 from repro.core import mandator, netsim, paxos, sporades
 from repro.core.netsim import FaultSchedule
 
+SCAN_PROTOCOLS = ("mandator-sporades", "mandator-paxos", "multipaxos",
+                  "mandator")
 
-@partial(jax.jit, static_argnames=("protocol", "cfg", "n_ticks"))
-def _run_scan(protocol: str, cfg: SMRConfig, n_ticks: int,
-              rate_per_tick: jax.Array, env: Dict, seed: int = 0):
+
+def _scan_body(protocol: str, cfg: SMRConfig, n_ticks: int,
+               rate_per_tick: jax.Array, env: Dict, seed: jax.Array):
+    """The tick loop. protocol/cfg/n_ticks are static; rate_per_tick, env
+    leaves, and seed may be traced (and batched by vmap)."""
     uses_mandator = protocol in ("mandator-sporades", "mandator-paxos",
                                  "mandator")
     st = {}
@@ -68,111 +78,90 @@ def _run_scan(protocol: str, cfg: SMRConfig, n_ticks: int,
     return st, trace
 
 
-def _weighted_quantile(vals: np.ndarray, weights: np.ndarray, q: float) -> float:
-    if len(vals) == 0 or weights.sum() <= 0:
-        return float("nan")
-    order = np.argsort(vals)
+def _weighted_quantile(vals: jax.Array, weights: jax.Array, q: float
+                       ) -> jax.Array:
+    """On-device weighted quantile over flat arrays; zero-weight entries are
+    inert (they only flatten the CDF) so no boolean filtering is needed."""
+    order = jnp.argsort(vals)
     v, w = vals[order], weights[order]
-    cum = np.cumsum(w) / w.sum()
-    return float(v[np.searchsorted(cum, q, side="left").clip(0, len(v) - 1)])
+    cum = jnp.cumsum(w)
+    tot = cum[-1]
+    idx = jnp.clip(jnp.searchsorted(cum / tot, q, side="left"),
+                   0, v.shape[0] - 1)
+    return jnp.where(tot > 0, v[idx], jnp.nan)
 
 
 def _batch_metrics(cfg: SMRConfig, create_t, arr_mean, count, commit_t,
                    warmup_frac=0.15, bucket_ms=500.0) -> Dict:
-    """Post-hoc metrics over batch records (ticks -> ms via cfg.tick_ms)."""
-    n_ticks = int(cfg.sim_seconds * 1000 / cfg.tick_ms)
-    ok = np.isfinite(commit_t) & (count > 0) & np.isfinite(create_t)
+    """Metrics over batch records [n, R] (ticks -> ms via cfg.tick_ms),
+    fully on-device so it vmaps across grid points."""
+    n_ticks = netsim.sim_ticks(cfg)
+    ok = jnp.isfinite(commit_t) & (count > 0) & jnp.isfinite(create_t)
     lat_ms = (commit_t - arr_mean) * cfg.tick_ms
     w0 = warmup_frac * n_ticks
     in_win = ok & (commit_t >= w0)
     win_s = (n_ticks - w0) * cfg.tick_ms / 1000.0
-    tput = float(count[in_win].sum() / win_s) if win_s > 0 else 0.0
-    med = _weighted_quantile(lat_ms[in_win], count[in_win], 0.5)
-    p99 = _weighted_quantile(lat_ms[in_win], count[in_win], 0.99)
+    w = jnp.where(in_win, count, 0.0).ravel()
+    tput = jnp.sum(w) / win_s if win_s > 0 else jnp.float32(0.0)
+    med = _weighted_quantile(lat_ms.ravel(), w, 0.5)
+    p99 = _weighted_quantile(lat_ms.ravel(), w, 0.99)
     nbuck = int(np.ceil(n_ticks * cfg.tick_ms / bucket_ms))
-    timeline = np.zeros(nbuck)
-    b = (commit_t[ok] * cfg.tick_ms / bucket_ms).astype(int).clip(0, nbuck - 1)
-    np.add.at(timeline, b, count[ok])
-    timeline /= bucket_ms / 1000.0
+    b = jnp.where(ok, commit_t * (cfg.tick_ms / bucket_ms), 0.0
+                  ).astype(jnp.int32).clip(0, nbuck - 1)
+    timeline = jnp.zeros((nbuck,)).at[b.ravel()].add(
+        jnp.where(ok, count, 0.0).ravel())
+    timeline = timeline / (bucket_ms / 1000.0)
     return {"throughput": tput, "median_ms": med, "p99_ms": p99,
-            "timeline": timeline, "committed": float(count[ok].sum())}
+            "timeline": timeline,
+            "committed": jnp.sum(jnp.where(ok, count, 0.0))}
 
 
-def _vc_commit_ticks(cvc_trace: np.ndarray, n: int, r_max: int) -> np.ndarray:
-    """cvc_trace: [ticks, n] monotone. commit tick of batch (k, r) for
-    r in 1..r_max -> [n, r_max] (inf if never)."""
-    out = np.full((n, r_max), np.inf)
-    for k in range(n):
-        col = cvc_trace[:, k]
-        rs = np.arange(1, r_max + 1)
-        idx = np.searchsorted(col, rs, side="left")
-        valid = idx < len(col)
-        out[k, valid] = idx[valid]
+def _vc_commit_ticks(cvc_trace: jax.Array, r_max: int) -> jax.Array:
+    """cvc_trace: [ticks, n] monotone. Returns [n, r_max] where column r is
+    the commit tick of batch (k, r); rounds are 1-based so column 0 is inf,
+    and inf marks rounds that never commit."""
+    ticks = cvc_trace.shape[0]
+    rs = jnp.arange(r_max)
+
+    def per_origin(col):
+        idx = jnp.searchsorted(col, rs, side="left")
+        valid = (idx < ticks) & (rs >= 1)
+        return jnp.where(valid, idx.astype(jnp.float32), jnp.inf)
+
+    return jax.vmap(per_origin, in_axes=1)(cvc_trace)
+
+
+def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
+              rate_per_tick: jax.Array, seed: jax.Array) -> Dict:
+    """One grid point, traceable end-to-end: tick scan + on-device metric
+    extraction. Returns a dict of arrays (scalars unless noted)."""
+    n_ticks = netsim.sim_ticks(cfg)
+    st, trace = _scan_body(protocol, cfg, n_ticks, rate_per_tick, env, seed)
+    if protocol == "mandator":
+        # dissemination completion = "commit" for availability accounting
+        wl, cvc = st["m"]["wl"], trace["own_round"]
+    elif protocol in ("mandator-sporades", "mandator-paxos"):
+        # batch r commits once the committed VC reaches r (1-based rounds)
+        wl, cvc = st["m"]["wl"], trace["cvc"]
+    elif protocol == "multipaxos":
+        wl, cvc = st["p"]["wl"], trace["committed_slot"]
+    else:
+        raise ValueError(protocol)
+    commit_t = _vc_commit_ticks(cvc, wl["batch_count"].shape[1])
+    out = _batch_metrics(cfg, wl["batch_create_t"], wl["batch_arr_mean"],
+                         wl["batch_count"], commit_t)
+    if protocol == "mandator-sporades":
+        out["async_frac"] = jnp.mean(trace["is_async"].astype(jnp.float32))
+        out["views"] = jnp.max(trace["v_cur"])
+        out["cvc_all"] = trace["cvc_all"]          # [ticks, n, n]
+        out["commit_key"] = trace["commit_key"]    # [ticks, n]
     return out
 
 
 def run_sim(protocol: str, cfg: SMRConfig, rate_tx_s: float,
             faults: Optional[FaultSchedule] = None, seed: int = 0) -> Dict:
-    faults = faults or FaultSchedule()
-    env = netsim.build_env(cfg, faults)
-    n_ticks = env["n_ticks"]
-    n = cfg.n_replicas
-    rate_per_tick = jnp.float32(rate_tx_s * cfg.tick_ms / 1000.0 / n)
-
-    if protocol == "epaxos":
-        from repro.core.epaxos import run_epaxos_model
-        return run_epaxos_model(cfg, rate_tx_s, faults)
-    if protocol == "rabia":
-        from repro.core.rabia import run_rabia_model
-        return run_rabia_model(cfg, rate_tx_s, faults)
-
-    st, trace = _run_scan(protocol, cfg, int(n_ticks), rate_per_tick, env,
-                          seed)
-    trace = jax.tree.map(np.asarray, trace)
-    result: Dict = {"protocol": protocol, "rate": rate_tx_s}
-
-    if protocol == "mandator":
-        # dissemination completion = "commit" for availability accounting
-        wl = jax.tree.map(np.asarray, st["m"]["wl"])
-        cvc = trace["own_round"]                       # [ticks, n]
-        commit_ticks = _vc_commit_ticks(cvc, n, wl["batch_count"].shape[1])
-        result.update(_batch_metrics(
-            cfg, np.asarray(wl["batch_create_t"]),
-            np.asarray(wl["batch_arr_mean"]),
-            np.asarray(wl["batch_count"]),
-            np.concatenate([np.full((n, 1), np.inf), commit_ticks], axis=1)[
-                :, :wl["batch_count"].shape[1]]))
-        return result
-
-    if protocol in ("mandator-sporades", "mandator-paxos"):
-        wl = jax.tree.map(np.asarray, st["m"]["wl"])
-        cvc = trace["cvc"]                             # [ticks, n]
-        commit_ticks = _vc_commit_ticks(cvc, n, wl["batch_count"].shape[1])
-        # batch r commits with VC >= r; index r-1 in arrays is round r? --
-        # rounds are 1-based; array column r holds round r (col 0 unused).
-        result.update(_batch_metrics(
-            cfg, np.asarray(wl["batch_create_t"]),
-            np.asarray(wl["batch_arr_mean"]),
-            np.asarray(wl["batch_count"]),
-            np.concatenate([np.full((n, 1), np.inf), commit_ticks], axis=1)[
-                :, :wl["batch_count"].shape[1]]))
-        if protocol == "mandator-sporades":
-            result["async_frac"] = float(trace["is_async"].mean())
-            result["views"] = int(trace["v_cur"].max())
-            result["cvc_all"] = trace["cvc_all"]
-            result["commit_key"] = trace["commit_key"]
-        return result
-
-    if protocol == "multipaxos":
-        wl = jax.tree.map(np.asarray, st["p"]["wl"])
-        cs = trace["committed_slot"]                   # [ticks, n] per leader
-        commit_ticks = _vc_commit_ticks(cs, n, wl["batch_count"].shape[1])
-        result.update(_batch_metrics(
-            cfg, np.asarray(wl["batch_create_t"]),
-            np.asarray(wl["batch_arr_mean"]),
-            np.asarray(wl["batch_count"]),
-            np.concatenate([np.full((n, 1), np.inf), commit_ticks], axis=1)[
-                :, :wl["batch_count"].shape[1]]))
-        return result
-
-    raise ValueError(protocol)
+    """Single-point wrapper over the batched engine (experiment.run_sweep)."""
+    from repro.core.experiment import SweepSpec, run_sweep
+    spec = SweepSpec(rates=(float(rate_tx_s),), seeds=(int(seed),),
+                     faults=(faults or FaultSchedule(),))
+    return run_sweep(protocol, cfg, spec)[0]

@@ -25,11 +25,9 @@ from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim, workload
 
-DMAX = 4096
-
-
 def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
     n = cfg.n_replicas
+    dmax = cfg.delay_horizon_ticks
     return {
         "wl": workload.init_workload(cfg, n_ticks),
         "own_round": jnp.zeros((n,), jnp.int32),       # last completed round
@@ -37,8 +35,8 @@ def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
         "lcr": jnp.zeros((n, n), jnp.int32),           # i's lastCompletedRounds
         "seen_round": jnp.zeros((n, n), jnp.int32),    # i's max batch seen from j
         "vote_max": jnp.zeros((n, n), jnp.int32),      # votes i received from j
-        "batch_ch": ch.make_channel(DMAX, n, 2),   # (round, lastCompleted)
-        "vote_ch": ch.make_channel(DMAX, n, 1),
+        "batch_ch": ch.make_channel(dmax, n, 2),   # (round, lastCompleted)
+        "vote_ch": ch.make_channel(dmax, n, 1),
         "egress_busy": jnp.zeros((n,), jnp.float32),
     }
 

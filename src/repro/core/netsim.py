@@ -1,11 +1,20 @@
 """WAN network environment: per-pair delays, NIC egress serialization,
 crash faults, and targeted-minority DDoS (the §5.5 generalized
 delayed-view-change attack).
+
+``build_env`` is fully array-native: every leaf of the returned dict is a
+fixed-shape ``jnp`` array (no Python scalars), so environments built from
+different ``FaultSchedule`` variants can be stacked leaf-wise
+(``stack_envs``) and the whole tick loop vmapped over the stacked axis by
+the batched experiment engine (core/experiment.py). Pass ``n_windows`` to
+pad the DDoS window table to a common width before stacking; padding rows
+are never read because the window index stays below ``ddos_windows`` for
+every simulated tick.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,37 +35,65 @@ class FaultSchedule:
     ddos_seed: int = 7
 
 
-def build_env(cfg: SMRConfig, faults: FaultSchedule) -> Dict[str, jnp.ndarray]:
+def sim_ticks(cfg: SMRConfig) -> int:
+    """Number of simulator ticks — static (known at trace time)."""
+    return int(cfg.sim_seconds * 1000 / cfg.tick_ms)
+
+
+def ddos_windows(cfg: SMRConfig, faults: FaultSchedule) -> int:
+    """Rows needed in the attacked-minority table for this schedule."""
+    if not faults.ddos:
+        return 1
+    return int(np.ceil(cfg.sim_seconds / faults.ddos_repick_s)) + 1
+
+
+def build_env(cfg: SMRConfig, faults: FaultSchedule,
+              n_windows: Optional[int] = None) -> Dict[str, jnp.ndarray]:
     n = cfg.n_replicas
+    # Channels cap a message's total delay at delay_horizon_ticks - 1
+    # (channel.send clips); NIC backlog beyond the horizon is delivered at
+    # the horizon by design, but the *static* link + attack delay exceeding
+    # it is a misconfiguration that would silently distort every message.
+    static_delay = (np.max(cfg.delays_ms())
+                    + (faults.ddos_attack_delay_ms if faults.ddos else 0.0)
+                    ) / cfg.tick_ms
+    if static_delay >= cfg.delay_horizon_ticks:
+        raise ValueError(
+            f"link + DDoS delay ({static_delay:.0f} ticks) exceeds "
+            f"delay_horizon_ticks={cfg.delay_horizon_ticks}; raise the "
+            "horizon in SMRConfig")
     delays = jnp.asarray(cfg.delays_ms() / cfg.tick_ms)        # [n,n] ticks
     crash = (jnp.full((n,), jnp.inf) if faults.crash_time_s is None
              else jnp.asarray(faults.crash_time_s * 1000.0 / cfg.tick_ms))
-    ticks = int(cfg.sim_seconds * 1000 / cfg.tick_ms)
+    w = ddos_windows(cfg, faults)
+    if n_windows is None:
+        n_windows = w
+    # pre-generate the attacked minority per repick window
+    att = np.zeros((n_windows, n), np.bool_)
     if faults.ddos:
-        # pre-generate the attacked minority per repick window
         rng = np.random.RandomState(faults.ddos_seed)
         f = (n - 1) // 2
-        n_windows = int(np.ceil(cfg.sim_seconds / faults.ddos_repick_s)) + 1
-        att = np.zeros((n_windows, n), np.bool_)
-        for w in range(n_windows):
-            att[w, rng.choice(n, size=f, replace=False)] = True
-        attacked = jnp.asarray(att)
-    else:
-        attacked = jnp.zeros((1, n), jnp.bool_)
+        for k in range(w):
+            att[k, rng.choice(n, size=f, replace=False)] = True
     return {
         "delays": delays,
         "crash_tick": crash,
-        "attacked": attacked,
+        "attacked": jnp.asarray(att),
         "ddos_delay": jnp.float32(
             faults.ddos_attack_delay_ms / cfg.tick_ms if faults.ddos else 0.0),
         "repick_ticks": jnp.int32(max(1, int(
             faults.ddos_repick_s * 1000 / cfg.tick_ms))),
-        "n_ticks": ticks,
         "bytes_per_tick": jnp.float32(
             cfg.nic_gbps * 1e9 / 8.0 * cfg.tick_ms / 1000.0),
         "cpu_req_per_tick": jnp.float32(
             cfg.tick_ms * 1000.0 / cfg.cpu_us_per_request),
     }
+
+
+def stack_envs(envs: Sequence[Dict[str, jnp.ndarray]]) -> Dict[str, jnp.ndarray]:
+    """Stack envs leaf-wise into a batched env (leading axis = variant).
+    All envs must come from the same cfg and a common ``n_windows``."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *envs)
 
 
 def alive(env, t) -> jax.Array:

@@ -27,9 +27,6 @@ from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim, workload
 
-DMAX = 4096
-
-
 def _phase1_ticks(cfg: SMRConfig) -> jnp.ndarray:
     """Majority RTT per prospective leader (modeled phase-1 cost)."""
     d = cfg.delays_ms() / cfg.tick_ms
@@ -41,6 +38,7 @@ def _phase1_ticks(cfg: SMRConfig) -> jnp.ndarray:
 
 def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool) -> Dict:
     n = cfg.n_replicas
+    dmax = cfg.delay_horizon_ticks
     return {
         "wl": workload.init_workload(cfg, n_ticks),
         "view": jnp.zeros((n,), jnp.int32),
@@ -52,9 +50,9 @@ def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool) -> Dict:
         "committed_slot": jnp.zeros((n,), jnp.int32),
         "cvc": jnp.zeros((n, n), jnp.int32),          # mandator mode commit VC
         "slot_vc": jnp.zeros((n, 1 + n), jnp.float32),  # outstanding slot payload
-        "fw_ch": ch.make_channel(DMAX, n, 2, additive=True),  # (count, tsum)
-        "acc_ch": ch.make_channel(DMAX, n, 3 + n),    # (view, slot, ., vc)
-        "ack_ch": ch.make_channel(DMAX, n, 1),
+        "fw_ch": ch.make_channel(dmax, n, 2, additive=True),  # (count, tsum)
+        "acc_ch": ch.make_channel(dmax, n, 3 + n),    # (view, slot, ., vc)
+        "ack_ch": ch.make_channel(dmax, n, 1),
         "egress_busy": jnp.zeros((n,), jnp.float32),
         "phase1": _phase1_ticks(cfg),
     }

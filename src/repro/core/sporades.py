@@ -27,7 +27,6 @@ from repro.core import channel as ch
 from repro.core import netsim
 from repro.core.coin import coin_table
 
-DMAX = 4096
 RS = 1 << 14                    # rounds-per-view bound (rank key packing)
 MAX_VIEWS = 4096
 
@@ -38,6 +37,7 @@ def key(v, r):
 
 def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
     n = cfg.n_replicas
+    dmax = cfg.delay_horizon_ticks
     z = lambda *s: jnp.zeros(s, jnp.int32)
     return {
         "v_cur": z(n), "r_cur": z(n),
@@ -63,12 +63,12 @@ def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
         "va_st": jnp.full((n, n, n), -1.0, jnp.float32),
         "ac_st": jnp.full((n, n, 2 + n), -1.0, jnp.float32),
         # channels
-        "prop_ch": ch.make_channel(DMAX, n, 2 + 2 * n),
-        "vote_ch": ch.make_channel(DMAX, n, 2 + n),
-        "to_ch": ch.make_channel(DMAX, n, 2 + n),
-        "pa_ch": ch.make_channel(DMAX, n, 1 + n),
-        "va_ch": ch.make_channel(DMAX, n, n),
-        "ac_ch": ch.make_channel(DMAX, n, 2 + n),
+        "prop_ch": ch.make_channel(dmax, n, 2 + 2 * n),
+        "vote_ch": ch.make_channel(dmax, n, 2 + n),
+        "to_ch": ch.make_channel(dmax, n, 2 + n),
+        "pa_ch": ch.make_channel(dmax, n, 1 + n),
+        "va_ch": ch.make_channel(dmax, n, n),
+        "ac_ch": ch.make_channel(dmax, n, 2 + n),
         "coins": coin_table(MAX_VIEWS, n),
     }
 

@@ -3,7 +3,12 @@ Sporades dual-mode commit under crashes/stragglers, elastic replans,
 checkpoint commit cuts, optimizer + compression."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # degrade: only property tests skip
+    HAVE_HYPOTHESIS = False
 
 from repro.runtime.elastic import StragglerPolicy, grad_scale, replan
 from repro.runtime.mandator_rt import MandatorRuntime
@@ -74,7 +79,10 @@ def test_sporades_rt_no_quorum_blocks():
 
 
 def test_sporades_rt_crash_then_recover():
-    s = SporadesRuntime(3, seed=0)
+    # seed=2: the view-1 coin elects live pod 1, so the fallback actually
+    # commits async (seed=0 elects the crashed pod 0 — the fallback then
+    # only advances the view and sync resumes without any async commit).
+    s = SporadesRuntime(3, seed=2)
     s.crash(0)                               # leader of view 0 dead
     got = []
     for step in range(6):
@@ -112,12 +120,8 @@ def test_straggler_policy():
     assert fb and len(on_time) == 4
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(2, 9), st.data())
-def test_sporades_rt_commit_needs_quorum_property(n, data):
+def _commit_needs_quorum_case(n, dead):
     s = SporadesRuntime(n, seed=3)
-    dead = data.draw(st.sets(st.integers(0, n - 1),
-                             max_size=n))
     for d in dead:
         s.crash(d)
     live = [i for i in range(n) if i not in dead]
@@ -128,3 +132,17 @@ def test_sporades_rt_commit_needs_quorum_property(n, data):
         assert rec is None           # never commits without a quorum
     if rec is not None:
         assert len(live) >= n - f
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 9), st.data())
+    def test_sporades_rt_commit_needs_quorum_property(n, data):
+        dead = data.draw(st.sets(st.integers(0, n - 1), max_size=n))
+        _commit_needs_quorum_case(n, dead)
+else:
+    def test_sporades_rt_commit_needs_quorum_property():
+        """Degraded fixed-case variant (hypothesis not installed —
+        pip install -r requirements-dev.txt for the property test)."""
+        for n, dead in ((5, set()), (5, {0, 1, 2}), (3, {0, 1}), (9, {4})):
+            _commit_needs_quorum_case(n, dead)

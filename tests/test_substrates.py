@@ -4,7 +4,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # degrade: only property tests skip
+    HAVE_HYPOTHESIS = False
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
@@ -129,9 +134,7 @@ def test_checkpoint_quantized_opt_state_roundtrip(tmp_path):
                                   np.asarray(st2["m"]["w"]["q"]))
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 1000), st.integers(1, 8))
-def test_pipeline_shard_union_property(step, n_shards):
+def _shard_union_case(step, n_shards):
     """Shards always tile the global batch deterministically."""
     cfg = get_config("smollm-135m").reduced()
     if 8 % n_shards:
@@ -144,3 +147,16 @@ def test_pipeline_shard_union_property(step, n_shards):
     assert total == 8
     again = batch_shard(cfg, shape, dcfg, step, 0, n_shards)
     np.testing.assert_array_equal(shards[0]["tokens"], again["tokens"])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000), st.integers(1, 8))
+    def test_pipeline_shard_union_property(step, n_shards):
+        _shard_union_case(step, n_shards)
+else:
+    def test_pipeline_shard_union_property():
+        """Degraded fixed-case variant (hypothesis not installed —
+        pip install -r requirements-dev.txt for the property test)."""
+        for step, n_shards in ((0, 1), (7, 2), (999, 8), (13, 5)):
+            _shard_union_case(step, n_shards)
