@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs.smr import PAPER_CLAIMS, SMRConfig
 from repro.core.experiment import SweepSpec, run_sweep
 from repro.core.netsim import FaultSchedule
+from repro.scenarios import library as scenario_library
 
 ART = Path(__file__).resolve().parent / "artifacts"
 
@@ -120,6 +121,39 @@ def fig9_scalability(sim_seconds: float = 3.0) -> List[Row]:
         rows.append(_row(f"fig9/n={n}", r["median_ms"],
                          tput=round(r["throughput"])))
     (ART / "fig9.json").write_text(json.dumps(out, indent=1))
+    return rows
+
+
+def robustness(sim_seconds: float = 4.0) -> List[Row]:
+    """Protocol × scenario robustness matrix over the curated adversary
+    library (scenarios/library.py). Each protocol's whole
+    scenario × rate grid is ONE batched sweep (one compiled program), so
+    adding a scenario costs a vmap lane, not a retrace."""
+    cfg = SMRConfig(sim_seconds=sim_seconds)
+    lib = scenario_library.scenarios(sim_seconds, cfg.n_replicas)
+    sweeps = {
+        "mandator-sporades": (50_000, 200_000),
+        "mandator-paxos": (50_000, 200_000),
+        "multipaxos": (10_000, 30_000),
+    }
+    rows: List[Row] = []
+    matrix: dict = {}
+    names = list(lib)
+    fin = lambda x: float(x) if np.isfinite(x) else None  # noqa: E731
+    for proto, rates in sweeps.items():
+        spec = SweepSpec(rates=rates, faults=tuple(lib.values()))
+        matrix[proto] = {s: {} for s in names}
+        for r, (rate, _, fi) in zip(run_sweep(proto, cfg, spec),
+                                    spec.points()):
+            scen = names[fi]
+            matrix[proto][scen][str(round(rate))] = {
+                "tput": fin(r["throughput"]), "med_ms": fin(r["median_ms"]),
+                "p99_ms": fin(r["p99_ms"]), "committed": fin(r["committed"]),
+            }
+            rows.append(_row(f"robustness/{proto}@{round(rate)}/{scen}",
+                             r["median_ms"], tput=round(r["throughput"]),
+                             committed=round(r["committed"])))
+    (ART / "robustness.json").write_text(json.dumps(matrix, indent=1))
     return rows
 
 

@@ -37,12 +37,19 @@ def main() -> None:
         "fig7": lambda: figures.fig7_crash(sim_s),
         "fig8": lambda: figures.fig8_ddos(sim_s),
         "fig9": lambda: figures.fig9_scalability(max(sim_s - 1, 2.0)),
+        "robustness": lambda: figures.robustness(sim_s),
         "paper": figures.paper_comparison,
         "kernels": kernel_bench,
         "roofline_single": lambda: roofline.rows("single"),
         "roofline_multi": lambda: roofline.rows("multi"),
     }
+    if only:
+        unknown = only - suites.keys()
+        if unknown:
+            sys.exit(f"unknown suite(s): {', '.join(sorted(unknown))}; "
+                     f"valid: {', '.join(suites)}")
     print("name,us_per_call,derived")
+    errored = []
     for name, fn in suites.items():
         if only and name not in only:
             continue
@@ -52,10 +59,13 @@ def main() -> None:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            errored.append(name)
         traces = sum(experiment.trace_counts().values())
         print(f"# {name} done in {time.time() - t0:.0f}s "
               f"(sweep traces so far: {traces})", file=sys.stderr)
     roofline.main()
+    if errored:
+        sys.exit(f"suite(s) errored: {', '.join(errored)}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,14 @@ Sweeps go through the batched experiment engine: each protocol's rate grid
 is one compiled vmapped program (see docs/ARCHITECTURE.md).
 
   PYTHONPATH=src python examples/wan_consensus_demo.py
+
+Scenario showcase — run any adversary from the curated library
+(scenarios/library.py) and watch the throughput timeline around its
+windows:
+
+  PYTHONPATH=src python examples/wan_consensus_demo.py --scenario region-outage
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -17,9 +24,10 @@ import numpy as np
 from repro.configs.smr import SMRConfig
 from repro.core.experiment import SweepSpec, run_sweep
 from repro.core.netsim import FaultSchedule
+from repro.scenarios import library
 
 
-def main() -> None:
+def paper_tour() -> None:
     cfg = SMRConfig(sim_seconds=3.0)
     print("== best-case WAN (5 regions: Virginia, Ireland, Mumbai, "
           "São Paulo, Tokyo) ==")
@@ -41,6 +49,46 @@ def main() -> None:
         r = run_sweep(proto, cfg, spec)[0]
         tl = "|".join(f"{x/1000:.0f}k" for x in r["timeline"])
         print(f" {proto:20s} [{tl}] tx/s per 500ms")
+
+
+def scenario_showcase(name: str, sim_s: float, rate: float) -> None:
+    cfg = SMRConfig(sim_seconds=sim_s)
+    scen = library.get(name, sim_s, cfg.n_replicas)
+    windows = [(getattr(ev, "start_s", getattr(ev, "at_s", 0.0)),
+                getattr(ev, "end_s", float("inf")), type(ev).__name__)
+               for ev in scen.events]
+    print(f"== scenario {name!r} on the 5-region WAN "
+          f"({sim_s:.0f}s sim, {rate:,.0f} tx/s offered) ==")
+    for s, e, kind in windows:
+        end = f"{min(e, sim_s):.2f}s" if e != float("inf") else "end"
+        print(f"  {kind:17s} {s:.2f}s -> {end}")
+    spec = SweepSpec(rates=(rate,), faults=(scen,))
+    for proto in ("mandator-sporades", "mandator-paxos", "multipaxos"):
+        r = run_sweep(proto, cfg, spec)[0]
+        print(f"\n {proto}: {r['throughput']:,.0f} tx/s overall, "
+              f"median {r['median_ms']:.0f} ms")
+        tl = np.asarray(r["timeline"])
+        bucket_s = sim_s / len(tl)
+        marks = "".join(
+            "#" if any(s <= (b + 0.5) * bucket_s < min(e, sim_s)
+                       for s, e, _ in windows) else "."
+            for b in range(len(tl)))
+        print(f"   window  [{marks}]  (# = adversity active)")
+        print("   tx/s    [" + "|".join(f"{x/1000:.0f}k" for x in tl) + "]"
+              f"  per {bucket_s * 1000:.0f}ms bucket")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="",
+                    help=f"showcase one of: {', '.join(library.NAMES)}")
+    ap.add_argument("--sim-seconds", type=float, default=4.0)
+    ap.add_argument("--rate", type=float, default=100_000)
+    args = ap.parse_args()
+    if args.scenario:
+        scenario_showcase(args.scenario, args.sim_seconds, args.rate)
+    else:
+        paper_tour()
 
 
 if __name__ == "__main__":

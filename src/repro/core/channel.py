@@ -29,11 +29,16 @@ def make_channel(dmax: int, n: int, p: int, additive: bool = False
 
 
 def send(ch: Dict[str, jax.Array], t: jax.Array, payload: jax.Array,
-         delay_ticks: jax.Array, mask: jax.Array, additive: bool = False
-         ) -> Dict[str, jax.Array]:
+         delay_ticks: jax.Array, mask: jax.Array, additive: bool = False,
+         drop: jax.Array | None = None) -> Dict[str, jax.Array]:
     """payload: [n, n, P] (sender, receiver, fields); delay_ticks: [n, n]
     int32 >= 1; mask: [n, n] bool — which (i, j) actually send this tick.
+    drop: optional [n, n] bool — links the network scenario cuts this tick
+    (netsim.link_drop); a dropped send is a silent omission, which the
+    monotone-payload protocols tolerate by construction.
     Merging policy: elementwise max (monotone payloads) or add (counters)."""
+    if drop is not None:
+        mask = mask & ~drop
     dmax = ch["buf"].shape[0]
     n = payload.shape[0]
     slot = (t + jnp.clip(delay_ticks, 1, dmax - 1)) % dmax          # [n, n]

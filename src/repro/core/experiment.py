@@ -6,8 +6,9 @@ protocol, and fault scenario. Instead of re-tracing the tick-level
 ``jax.lax.scan`` for every grid point, ``run_sweep`` lowers a ``SweepSpec``
 to a single ``jax.vmap``-over-scan dispatch:
 
-  1. every ``FaultSchedule`` variant becomes an array-native env
-     (``netsim.build_env`` with a common DDoS-window pad), stacked leaf-wise;
+  1. every scenario (or legacy ``FaultSchedule``) variant becomes an
+     array-native env (``netsim.build_env`` with a common window-table
+     pad), stacked leaf-wise;
   2. the cartesian grid is flattened to B points, each a (env, rate, seed)
      triple gathered from the stacks;
   3. ``harness.sim_point`` — scan *plus* on-device metric extraction — is
@@ -52,12 +53,14 @@ def reset_trace_counts() -> None:
 @dataclass(frozen=True)
 class SweepSpec:
     """A sweep grid: cartesian product of rates (tx/s), PRNG seeds, and
-    fault-schedule variants. ``points()`` yields the flattened grid in
-    rate-major order as (rate, seed, fault_index) — the same order
-    ``run_sweep`` returns results in."""
+    network-adversity variants — each entry of ``faults`` is a
+    ``repro.scenarios.Scenario`` or a legacy ``FaultSchedule`` (compiled to
+    one). ``points()`` yields the flattened grid in rate-major order as
+    (rate, seed, fault_index) — the same order ``run_sweep`` returns
+    results in."""
     rates: Tuple[float, ...]
     seeds: Tuple[int, ...] = (0,)
-    faults: Tuple[FaultSchedule, ...] = (FaultSchedule(),)
+    faults: Tuple = (FaultSchedule(),)
 
     def points(self) -> Iterator[Tuple[float, int, int]]:
         for rate, seed, fi in itertools.product(
@@ -82,7 +85,7 @@ def _lower(cfg: SMRConfig, spec: SweepSpec
            ) -> Tuple[List[Tuple[float, int, int]], Dict, jax.Array, jax.Array]:
     """Flatten the grid to stacked per-point inputs (env leaves, rate, seed)."""
     pts = list(spec.points())
-    n_windows = max(netsim.ddos_windows(cfg, f) for f in spec.faults)
+    n_windows = max(netsim.env_windows(cfg, f) for f in spec.faults)
     stack = netsim.stack_envs(
         [netsim.build_env(cfg, f, n_windows) for f in spec.faults])
     fidx = np.array([fi for _, _, fi in pts], np.int32)

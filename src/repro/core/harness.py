@@ -17,7 +17,7 @@ single-point wrapper over that engine, kept for backward compatibility.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,6 @@ import numpy as np
 
 from repro.configs.smr import SMRConfig
 from repro.core import mandator, netsim, paxos, sporades
-from repro.core.netsim import FaultSchedule
 
 SCAN_PROTOCOLS = ("mandator-sporades", "mandator-paxos", "multipaxos",
                   "mandator")
@@ -86,7 +85,10 @@ def _weighted_quantile(vals: jax.Array, weights: jax.Array, q: float
     v, w = vals[order], weights[order]
     cum = jnp.cumsum(w)
     tot = cum[-1]
-    idx = jnp.clip(jnp.searchsorted(cum / tot, q, side="left"),
+    # guard the denominator, not just the result: an empty window would
+    # otherwise divide by zero before the where (trips jax_debug_nans)
+    cdf = cum / jnp.where(tot > 0, tot, 1.0)
+    idx = jnp.clip(jnp.searchsorted(cdf, q, side="left"),
                    0, v.shape[0] - 1)
     return jnp.where(tot > 0, v[idx], jnp.nan)
 
@@ -159,9 +161,10 @@ def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
 
 
 def run_sim(protocol: str, cfg: SMRConfig, rate_tx_s: float,
-            faults: Optional[FaultSchedule] = None, seed: int = 0) -> Dict:
-    """Single-point wrapper over the batched engine (experiment.run_sweep)."""
+            faults=None, seed: int = 0) -> Dict:
+    """Single-point wrapper over the batched engine (experiment.run_sweep).
+    faults: a repro.scenarios.Scenario or legacy FaultSchedule (or None)."""
     from repro.core.experiment import SweepSpec, run_sweep
     spec = SweepSpec(rates=(float(rate_tx_s),), seeds=(int(seed),),
-                     faults=(faults or FaultSchedule(),))
+                     faults=(faults,))
     return run_sweep(protocol, cfg, spec)[0]

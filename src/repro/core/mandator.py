@@ -48,6 +48,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     quorum = n - f
     alive = netsim.alive(env, t)
     delays = netsim.link_delay(env, t)
+    drop = netsim.link_drop(env, t)
     st = dict(st)
 
     # 1) client arrivals + cpu refill
@@ -66,7 +67,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     vote_mask = jnp.swapaxes(bflags, 0, 1) & alive[:, None]   # [voter, owner]
     vote_payload = seen.astype(jnp.float32)[..., None]        # [n, n, 1]
     vote_ch = ch.send(st["vote_ch"], t, vote_payload,
-                      delays.astype(jnp.int32), vote_mask)
+                      delays.astype(jnp.int32), vote_mask, drop=drop)
 
     # 3) deliver votes; in-order completion check (lines 17-19); with lanes,
     #    several rounds may complete back-to-back in one tick
@@ -91,7 +92,8 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     # child processes serialize on their own NIC share; we model the replica
     # NIC as the shared egress (DESIGN.md §8)
     bytes_out = (count * cfg.request_bytes + 100.0)[:, None] * formed[:, None]
-    bytes_out = jnp.broadcast_to(bytes_out, (n, n)) / env["bytes_per_tick"]
+    bytes_out = jnp.broadcast_to(bytes_out, (n, n)) \
+        / netsim.nic_rate(env, t)[:, None]
     busy, ser_delay = netsim.egress_delay(st["egress_busy"], t, bytes_out)
     busy = jnp.where(formed, busy, st["egress_busy"])
     total_delay = (delays + jnp.where(formed[:, None], ser_delay, 0.0)
@@ -99,7 +101,8 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     bpay = jnp.stack([formed_round, own_round], axis=-1).astype(
         jnp.float32)[:, None, :] * jnp.ones((n, n, 1))
     batch_ch = ch.send(batch_ch, t, bpay, total_delay,
-                       formed[:, None] & jnp.ones((n, n), jnp.bool_))
+                       formed[:, None] & jnp.ones((n, n), jnp.bool_),
+                       drop=drop)
 
     st.update(wl=wl, own_round=own_round, formed_round=formed_round, lcr=lcr,
               seen_round=seen, vote_max=vote_max, batch_ch=batch_ch,

@@ -1,15 +1,25 @@
-"""WAN network environment: per-pair delays, NIC egress serialization,
-crash faults, and targeted-minority DDoS (the §5.5 generalized
-delayed-view-change attack).
+"""WAN network environment: per-pair delays, NIC egress serialization, and
+scenario-driven adversities (crash intervals, partitions, regional outages,
+gray failures, the §5.5 targeted-minority DDoS, bandwidth throttles).
 
 ``build_env`` is fully array-native: every leaf of the returned dict is a
 fixed-shape ``jnp`` array (no Python scalars), so environments built from
-different ``FaultSchedule`` variants can be stacked leaf-wise
-(``stack_envs``) and the whole tick loop vmapped over the stacked axis by
-the batched experiment engine (core/experiment.py). Pass ``n_windows`` to
-pad the DDoS window table to a common width before stacking; padding rows
-are never read because the window index stays below ``ddos_windows`` for
-every simulated tick.
+different scenarios can be stacked leaf-wise (``stack_envs``) and the whole
+tick loop vmapped over the stacked axis by the batched experiment engine
+(core/experiment.py).
+
+Adverse conditions come in as *windowed tables* compiled from a declarative
+``repro.scenarios.Scenario`` (see scenarios/compile.py): the run is cut
+into W windows over which everything is constant, and the env carries
+``win_of_tick [n_ticks]`` plus per-window ``alive_tab [W, n]``,
+``drop_tab [W, n, n]``, ``delay_tab [W, n, n]`` (extra ticks), and
+``nic_tab [W, n]`` (egress scale). Pass ``n_windows`` to pad the tables to
+a common width before stacking; padding rows are never read because
+``win_of_tick`` only indexes real windows.
+
+``FaultSchedule`` is the seed-era fault model, kept as a thin compatibility
+shim: it compiles to an equivalent Scenario (scenarios/compile.py), with
+bitwise-identical tables pinned by tests/test_scenarios.py.
 """
 from __future__ import annotations
 
@@ -25,7 +35,10 @@ from repro.configs.smr import SMRConfig
 
 @dataclass(frozen=True)
 class FaultSchedule:
-    """crash_time_s[i] — replica i stops at that time (inf = never).
+    """DEPRECATED shim over repro.scenarios (kept so seed-era callers and
+    the fig 6-9 benchmarks keep their exact semantics).
+
+    crash_time_s[i] — replica i stops at that time (inf = never).
     ddos: if enabled, every ``repick_s`` seconds a random minority set is
     attacked; their links gain ``attack_delay_ms`` each way."""
     crash_time_s: Optional[np.ndarray] = None
@@ -40,49 +53,40 @@ def sim_ticks(cfg: SMRConfig) -> int:
     return int(cfg.sim_seconds * 1000 / cfg.tick_ms)
 
 
-def ddos_windows(cfg: SMRConfig, faults: FaultSchedule) -> int:
-    """Rows needed in the attacked-minority table for this schedule."""
-    if not faults.ddos:
-        return 1
-    return int(np.ceil(cfg.sim_seconds / faults.ddos_repick_s)) + 1
+def env_windows(cfg: SMRConfig, faults) -> int:
+    """Windowed-table rows this scenario (or FaultSchedule) lowers to —
+    used to pick a common pad width before stacking envs."""
+    from repro import scenarios
+    return scenarios.compile.n_windows(cfg, scenarios.as_scenario(faults))
 
 
-def build_env(cfg: SMRConfig, faults: FaultSchedule,
+def build_env(cfg: SMRConfig, faults=None,
               n_windows: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """faults: a repro.scenarios.Scenario, a FaultSchedule (compat shim),
+    or None (fault-free baseline)."""
+    from repro import scenarios
     n = cfg.n_replicas
+    tab = scenarios.lower(cfg, scenarios.as_scenario(faults),
+                          pad_windows=n_windows)
     # Channels cap a message's total delay at delay_horizon_ticks - 1
     # (channel.send clips); NIC backlog beyond the horizon is delivered at
-    # the horizon by design, but the *static* link + attack delay exceeding
-    # it is a misconfiguration that would silently distort every message.
-    static_delay = (np.max(cfg.delays_ms())
-                    + (faults.ddos_attack_delay_ms if faults.ddos else 0.0)
-                    ) / cfg.tick_ms
+    # the horizon by design, but the *static* link + scenario delay
+    # exceeding it is a misconfiguration that would silently distort every
+    # message.
+    static_delay = (np.max(cfg.delays_ms()) / cfg.tick_ms
+                    + float(np.max(tab["extra_delay"], initial=0.0)))
     if static_delay >= cfg.delay_horizon_ticks:
         raise ValueError(
-            f"link + DDoS delay ({static_delay:.0f} ticks) exceeds "
+            f"link + scenario delay ({static_delay:.0f} ticks) exceeds "
             f"delay_horizon_ticks={cfg.delay_horizon_ticks}; raise the "
             "horizon in SMRConfig")
-    delays = jnp.asarray(cfg.delays_ms() / cfg.tick_ms)        # [n,n] ticks
-    crash = (jnp.full((n,), jnp.inf) if faults.crash_time_s is None
-             else jnp.asarray(faults.crash_time_s * 1000.0 / cfg.tick_ms))
-    w = ddos_windows(cfg, faults)
-    if n_windows is None:
-        n_windows = w
-    # pre-generate the attacked minority per repick window
-    att = np.zeros((n_windows, n), np.bool_)
-    if faults.ddos:
-        rng = np.random.RandomState(faults.ddos_seed)
-        f = (n - 1) // 2
-        for k in range(w):
-            att[k, rng.choice(n, size=f, replace=False)] = True
     return {
-        "delays": delays,
-        "crash_tick": crash,
-        "attacked": jnp.asarray(att),
-        "ddos_delay": jnp.float32(
-            faults.ddos_attack_delay_ms / cfg.tick_ms if faults.ddos else 0.0),
-        "repick_ticks": jnp.int32(max(1, int(
-            faults.ddos_repick_s * 1000 / cfg.tick_ms))),
+        "delays": jnp.asarray(cfg.delays_ms() / cfg.tick_ms),  # [n,n] ticks
+        "win_of_tick": jnp.asarray(tab["win_of_tick"]),        # [n_ticks]
+        "alive_tab": jnp.asarray(tab["alive"]),                # [W,n]
+        "drop_tab": jnp.asarray(tab["drop"]),                  # [W,n,n]
+        "delay_tab": jnp.asarray(tab["extra_delay"]),          # [W,n,n]
+        "nic_tab": jnp.asarray(tab["nic_scale"]),              # [W,n]
         "bytes_per_tick": jnp.float32(
             cfg.nic_gbps * 1e9 / 8.0 * cfg.tick_ms / 1000.0),
         "cpu_req_per_tick": jnp.float32(
@@ -96,17 +100,31 @@ def stack_envs(envs: Sequence[Dict[str, jnp.ndarray]]) -> Dict[str, jnp.ndarray]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *envs)
 
 
+def _win(env, t) -> jax.Array:
+    """Window row for tick t (scalar int32)."""
+    return env["win_of_tick"][t]
+
+
 def alive(env, t) -> jax.Array:
-    """[n] bool — replica has not crashed."""
-    return t < env["crash_tick"]
+    """[n] bool — replica is up in tick t's window."""
+    return env["alive_tab"][_win(env, t)]
 
 
 def link_delay(env, t) -> jax.Array:
-    """[n, n] delay in ticks including DDoS extra delay on attacked nodes."""
-    w = jnp.minimum(t // env["repick_ticks"], env["attacked"].shape[0] - 1)
-    att = env["attacked"][w]                                   # [n]
-    extra = (att[:, None] | att[None, :]) * env["ddos_delay"]
-    return env["delays"] + extra
+    """[n, n] delay in ticks including scenario extra delay (DDoS, outage
+    turbulence, gray jitter)."""
+    return env["delays"] + env["delay_tab"][_win(env, t)]
+
+
+def link_drop(env, t) -> jax.Array:
+    """[n, n] bool — links the scenario cuts this tick (partitions, gray
+    loss). Feed to channel.send's drop mask."""
+    return env["drop_tab"][_win(env, t)]
+
+
+def nic_rate(env, t) -> jax.Array:
+    """[n] effective egress bytes/tick per sender (throttle-scaled)."""
+    return env["bytes_per_tick"] * env["nic_tab"][_win(env, t)]
 
 
 def egress_delay(busy: jax.Array, t: jax.Array, bytes_out: jax.Array
@@ -115,7 +133,7 @@ def egress_delay(busy: jax.Array, t: jax.Array, bytes_out: jax.Array
     bytes sent this tick (serialized in receiver order). Returns
     (new_busy [n], extra_delay_ticks [n,n])."""
     # cumulative serialization time per receiver j (order: j ascending)
-    # NOTE: env['bytes_per_tick'] is folded in by the caller.
+    # NOTE: the effective nic_rate is folded in by the caller.
     cum = jnp.cumsum(bytes_out, axis=1)
     start = jnp.maximum(busy, t.astype(jnp.float32))[:, None]
     finish = start + cum

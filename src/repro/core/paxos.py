@@ -65,6 +65,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     maj = n // 2 + 1
     alive = netsim.alive(env, t)
     delays = netsim.link_delay(env, t).astype(jnp.int32)
+    drop = netsim.link_drop(env, t)
     to_ticks = jnp.float32(cfg.view_timeout_ms / cfg.tick_ms)
     tf = t.astype(jnp.float32)
     st = dict(st)
@@ -87,9 +88,13 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
         # the leader keeps local arrivals in its own pool (no self-forward)
         fw_mask = (jnp.arange(n)[None, :] == leader[:, None]) & alive[:, None] \
             & (cnt > 0)[:, None] & (rows != leader)[:, None]
-        fw_ch = ch.send(fw_ch, t, fw_pay, delays, fw_mask, additive=True)
+        fw_ch = ch.send(fw_ch, t, fw_pay, delays, fw_mask, additive=True,
+                        drop=drop)
         wl = dict(wl)
-        sent = fw_mask.any(axis=1)
+        # the forward channel is additive (counters), so a scenario-dropped
+        # link is NOT a tolerable omission: keep the batch buffered and
+        # retry next tick instead of destroying the requests
+        sent = (fw_mask & ~drop).any(axis=1)
         wl["buffer"] = jnp.where(sent, 0.0, wl["buffer"])
         wl["buffer_tsum"] = jnp.where(sent, 0.0, wl["buffer_tsum"])
         # leader pools forwarded requests
@@ -136,7 +141,8 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
         size_bytes = jnp.where(formed, count * cfg.request_bytes + 100.0, 0.0)
     outstanding = outstanding | formed
     # egress serialization (monolithic payload cost)
-    bytes_out = jnp.broadcast_to(size_bytes[:, None], (n, n)) / env["bytes_per_tick"]
+    bytes_out = jnp.broadcast_to(size_bytes[:, None], (n, n)) \
+        / netsim.nic_rate(env, t)[:, None]
     busy, ser = netsim.egress_delay(st["egress_busy"], t, bytes_out)
     busy = jnp.where(formed, busy, st["egress_busy"])
     total_delay = (delays + jnp.where(formed[:, None], ser, 0.0)).astype(jnp.int32)
@@ -146,7 +152,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
         slot_vc[:, 1:] if mandator_mode else jnp.zeros((n, n))], axis=1
         )[:, None, :] * jnp.ones((n, n, 1))
     acc_ch = ch.send(st["acc_ch"], t, acc_pay, total_delay,
-                     formed[:, None] & jnp.ones((n, n), jnp.bool_))
+                     formed[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
 
     # ---- follower: deliver accepts, ack, heartbeat --------------------------
     acc_ch, cfl, cpay = ch.deliver(acc_ch, t)
@@ -162,7 +168,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     # ack to the slot's leader
     ack_mask = fresh[:, None] & (jnp.arange(n)[None, :] == (view % n)[:, None])
     ack_pay = acc_slot.astype(jnp.float32)[:, None, None] * jnp.ones((n, n, 1))
-    ack_ch = ch.send(ack_ch, t, ack_pay, delays, ack_mask)
+    ack_ch = ch.send(ack_ch, t, ack_pay, delays, ack_mask, drop=drop)
 
     # ---- view change ---------------------------------------------------------
     expired = alive & (tf - last_heard > to_ticks)

@@ -86,6 +86,7 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     q = n - f
     alive = netsim.alive(env, t)
     delays = netsim.link_delay(env, t).astype(jnp.int32)
+    drop = netsim.link_drop(env, t)
     to_ticks = jnp.float32(cfg.view_timeout_ms / cfg.tick_ms)
     st = dict(st)
     tf = t.astype(jnp.float32)
@@ -122,7 +123,8 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
          bh_vc], axis=1)[:, None, :] * jnp.ones((n, n, 1))
     vote_mask = accept[:, None] & (jnp.arange(n)[None, :]
                                    == _leader_of(v_cur, n)[:, None])
-    vote_ch = ch.send(st["vote_ch"], t, vote_pay, delays, vote_mask)
+    vote_ch = ch.send(st["vote_ch"], t, vote_pay, delays, vote_mask,
+                      drop=drop)
 
     # ---- 2) deliver <vote>; leader trigger (Alg2 lines 9-19) --------------
     vote_ch, vfl, vpay = ch.deliver(vote_ch, t)
@@ -155,7 +157,8 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
          commit_key[:, None].astype(jnp.float32), prop_vc, cvc],
         axis=1)[:, None, :] * jnp.ones((n, n, 1))
     prop_ch = ch.send(prop_ch, t, prop_pay, delays,
-                      lead_trig[:, None] & jnp.ones((n, n), jnp.bool_))
+                      lead_trig[:, None] & jnp.ones((n, n), jnp.bool_),
+                      drop=drop)
     prop_key = jnp.where(lead_trig, new_key, st["prop_key"])
     # (leader's own block_high advances via self-delivery of its propose)
     last_vote_trig = jnp.where(lead_trig, kmax, st["last_vote_trig"])
@@ -166,7 +169,7 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
         [v_cur[:, None].astype(jnp.float32), bh_key[:, None].astype(jnp.float32),
          bh_vc], axis=1)[:, None, :] * jnp.ones((n, n, 1))
     to_ch = ch.send(st["to_ch"], t, to_pay, delays,
-                    fire[:, None] & jnp.ones((n, n), jnp.bool_))
+                    fire[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
     timeout_sent_v = jnp.where(fire, v_cur, st["timeout_sent_v"])
 
     # ---- 4) deliver <timeout>; async entry (Alg3 lines 1-7) ---------------
@@ -192,7 +195,7 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
         [pa_key1[:, None].astype(jnp.float32), avc], axis=1)[:, None, :] \
         * jnp.ones((n, n, 1))
     pa_ch = ch.send(st["pa_ch"], t, pa_pay, delays,
-                    enter[:, None] & jnp.ones((n, n), jnp.bool_))
+                    enter[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
     async_phase = jnp.where(enter, 1, st["async_phase"])
     my_r = jnp.where(enter, r1, st["my_r"])
     my_avc = jnp.where(enter[:, None], avc, st["my_avc"].astype(jnp.float32))
@@ -213,7 +216,8 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     va_fields = jnp.where(va_vote, pa_k.astype(jnp.float32), -1.0)  # [i, p]
     va_pay = jnp.broadcast_to(va_fields[:, None, :], (n, n, n))
     va_ch = ch.send(st["va_ch"], t, va_pay, delays,
-                    va_vote.any(axis=1)[:, None] & jnp.ones((n, n), jnp.bool_))
+                    va_vote.any(axis=1)[:, None] & jnp.ones((n, n), jnp.bool_),
+                    drop=drop)
 
     # ---- 6) deliver <vote-async>; heights (Alg3 lines 15-23) --------------
     va_ch, vafl, vapay = ch.deliver(va_ch, t)
@@ -248,7 +252,7 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
         [pa_key2[:, None].astype(jnp.float32), avc2], axis=1)[:, None, :] \
         * jnp.ones((n, n, 1))
     pa_ch = ch.send(pa_ch, t, pa_pay2, delays,
-                    go_h2[:, None] & jnp.ones((n, n), jnp.bool_))
+                    go_h2[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
     my_r = jnp.where(go_h2, r2, my_r)
     my_avc = jnp.where(go_h2[:, None], avc2, my_avc)
     async_phase = jnp.where(go_h2, 2, async_phase)
@@ -257,7 +261,7 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
         [v_cur[:, None].astype(jnp.float32), my_r[:, None].astype(jnp.float32),
          my_avc], axis=1)[:, None, :] * jnp.ones((n, n, 1))
     ac_ch = ch.send(st["ac_ch"], t, ac_pay, delays,
-                    to_ac[:, None] & jnp.ones((n, n), jnp.bool_))
+                    to_ac[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
     async_phase = jnp.where(to_ac, 3, async_phase)
 
     # ---- 7) deliver <asynchronous-complete>; exit (Alg3 lines 24-36) ------
@@ -308,7 +312,8 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
         * jnp.ones((n, n, 1))
     ex_vote_mask = exit_[:, None] & (jnp.arange(n)[None, :]
                                      == _leader_of(v_cur, n)[:, None])
-    vote_ch = ch.send(vote_ch, t, ex_vote_pay, delays, ex_vote_mask)
+    vote_ch = ch.send(vote_ch, t, ex_vote_pay, delays, ex_vote_mask,
+                      drop=drop)
 
     st.update(
         v_cur=v_cur, r_cur=r_cur, is_async=is_async, bh_key=bh_key,

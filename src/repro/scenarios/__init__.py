@@ -1,0 +1,30 @@
+"""Declarative WAN adversary scenarios.
+
+A ``Scenario`` is a named list of composable event primitives (crash
+intervals, partitions, regional outages, gray failures, targeted delay
+attacks, bandwidth throttles). ``compile.lower`` turns one into fixed-shape
+windowed tables that ``netsim.build_env`` embeds into the array-native env,
+so any scenario stacks leaf-wise (``netsim.stack_envs``) and vmaps through
+the batched experiment engine unchanged.
+
+``netsim.FaultSchedule`` (the seed-era fault model) is kept as a thin
+compatibility shim: ``as_scenario`` compiles it to an equivalent Scenario
+(see ``compile.from_fault_schedule``) with bitwise-identical env tables.
+"""
+from repro.scenarios.primitives import (
+    BandwidthThrottle,
+    Crash,
+    GrayFailure,
+    Partition,
+    Recover,
+    RegionOutage,
+    Scenario,
+    TargetedDelay,
+)
+from repro.scenarios.compile import as_scenario, from_fault_schedule, lower
+
+__all__ = [
+    "BandwidthThrottle", "Crash", "GrayFailure", "Partition", "Recover",
+    "RegionOutage", "Scenario", "TargetedDelay",
+    "as_scenario", "from_fault_schedule", "lower",
+]

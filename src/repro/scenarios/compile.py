@@ -1,0 +1,104 @@
+"""Lower a declarative Scenario to the array-native windowed env tables.
+
+The union of every primitive's tick edges cuts the run into W maximal
+windows over which all tables are constant; ``lower`` paints each primitive
+onto the rows it covers (in Scenario order) and emits, as plain numpy:
+
+  win_start[W]           first tick of each window (win_start[0] == 0)
+  win_of_tick[n_ticks]   tick -> window row (precomputed, exact)
+  alive[W, n], drop[W, n, n], extra_delay[W, n, n], nic_scale[W, n]
+
+``netsim.build_env`` embeds these into the env dict; padding to a common
+``n_windows`` (repeat-last-row, rows never read because ``win_of_tick``
+only indexes real windows) is what lets heterogeneous scenarios stack
+leaf-wise through ``netsim.stack_envs`` and vmap through
+``experiment.run_sweep`` as one compiled program.
+
+``from_fault_schedule`` compiles the seed-era ``netsim.FaultSchedule`` to
+an equivalent Scenario: crash times become permanent ``Crash`` events and
+the §5.5 DDoS becomes a random-minority ``TargetedDelay`` with the same
+seeded draw stream, so the lowered tables reproduce the old per-tick
+alive/link_delay values bitwise (pinned by tests/test_scenarios.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.smr import SMRConfig
+from repro.scenarios.primitives import Crash, Scenario, Tables, TargetedDelay
+
+
+def _sim_ticks(cfg: SMRConfig) -> int:
+    # keep in sync with netsim.sim_ticks (not imported: scenarios sit below
+    # core in the layering; netsim imports us lazily from build_env)
+    return int(cfg.sim_seconds * 1000 / cfg.tick_ms)
+
+
+def n_windows(cfg: SMRConfig, scenario: Scenario) -> int:
+    """Window count of the lowered scenario (for cross-scenario padding)."""
+    return len(_win_starts(cfg, scenario))
+
+
+def _win_starts(cfg: SMRConfig, scenario: Scenario) -> np.ndarray:
+    n_ticks = _sim_ticks(cfg)
+    edges = {0}
+    for ev in scenario.events:
+        edges.update(int(e) for e in ev.edges(cfg, n_ticks))
+    return np.array(sorted(e for e in edges if 0 <= e < n_ticks), np.int64)
+
+
+def lower(cfg: SMRConfig, scenario: Scenario,
+          pad_windows: Optional[int] = None) -> Tables:
+    n = cfg.n_replicas
+    n_ticks = _sim_ticks(cfg)
+    win_start = _win_starts(cfg, scenario)
+    w = len(win_start)
+    tab: Tables = {
+        "alive": np.ones((w, n), np.bool_),
+        "drop": np.zeros((w, n, n), np.bool_),
+        "extra_delay": np.zeros((w, n, n), np.float32),
+        "nic_scale": np.ones((w, n), np.float32),
+    }
+    for ev in scenario.events:
+        ev.paint(cfg, n_ticks, win_start, tab)
+    if pad_windows is not None:
+        if pad_windows < w:
+            raise ValueError(f"pad_windows={pad_windows} < {w} real windows")
+        pad = pad_windows - w
+        tab = {k: np.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1),
+                         mode="edge") for k, v in tab.items()}
+    tab["win_start"] = win_start
+    tab["win_of_tick"] = (np.searchsorted(win_start, np.arange(n_ticks),
+                                          side="right") - 1).astype(np.int32)
+    return tab
+
+
+def from_fault_schedule(faults) -> Scenario:
+    """Compatibility shim: compile a netsim.FaultSchedule to the equivalent
+    Scenario (same crash semantics, same seeded DDoS draw stream)."""
+    events = []
+    if faults.crash_time_s is not None:
+        for i, t_s in enumerate(np.asarray(faults.crash_time_s, np.float64)):
+            if np.isfinite(t_s):
+                # the seed-era check was t < float32(t_s * 1000 / tick_ms);
+                # ceil of that value is the first dead tick either way
+                events.append(Crash(start_s=float(t_s), targets=(i,)))
+    if faults.ddos:
+        events.append(TargetedDelay(
+            delay_ms=faults.ddos_attack_delay_ms, targets="random-minority",
+            repick_s=faults.ddos_repick_s, seed=faults.ddos_seed))
+    return Scenario(name="fault-schedule", events=tuple(events))
+
+
+def as_scenario(obj) -> Scenario:
+    """Normalize None / Scenario / FaultSchedule to a Scenario."""
+    if obj is None:
+        return Scenario()
+    if isinstance(obj, Scenario):
+        return obj
+    from repro.core.netsim import FaultSchedule
+    if isinstance(obj, FaultSchedule):
+        return from_fault_schedule(obj)
+    raise TypeError(f"expected Scenario or FaultSchedule, got {type(obj)}")

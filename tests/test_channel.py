@@ -1,0 +1,143 @@
+"""Channel invariants (core/channel.py): delayed delivery lands exactly at
+t + clip(delay, 1, dmax-1) (horizon-edge clipping included), colliding
+slots merge by elementwise max (monotone payloads) or add (counters),
+fold_state is monotone, and the drop mask is a silent omission. Property
+tests drive random delay matrices / payloads (hypothesis; degrades to
+fixed-seed cases when it is not installed, matching the repo pattern)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+
+DMAX, N, P = 16, 4, 3
+
+
+def _as_np(x):
+    return np.asarray(x)
+
+
+def _roundtrip_case(seed: int):
+    """Random delays (some past the horizon), random send mask: every
+    masked message is delivered exactly once, at t + clip(delay, 1, dmax-1),
+    with its exact payload; fold_state only ever grows."""
+    rng = np.random.RandomState(seed)
+    delays = rng.randint(0, 2 * DMAX, size=(N, N))
+    payload = rng.uniform(0.0, 100.0, (N, N, P)).astype(np.float32)
+    mask = rng.rand(N, N) < 0.7
+    c = ch.make_channel(DMAX, N, P)
+    c = ch.send(c, jnp.int32(0), jnp.asarray(payload),
+                jnp.asarray(delays, jnp.int32), jnp.asarray(mask))
+    eff = np.clip(delays, 1, DMAX - 1)
+    state = jnp.full((N, N, P), ch.NEG, jnp.float32)
+    seen = np.zeros((N, N), bool)
+    for t in range(1, DMAX):
+        c, flags, pay = ch.deliver(c, jnp.int32(t))
+        f = _as_np(flags)
+        expect = mask & (eff == t)
+        assert np.array_equal(f, expect), f"delivery flags wrong at t={t}"
+        assert np.array_equal(_as_np(pay)[f], payload[f]), \
+            "payload not delivered verbatim"
+        prev = _as_np(state)
+        state = ch.fold_state(state, flags, pay)
+        assert (_as_np(state) >= prev).all(), "fold_state not monotone"
+        seen |= f
+    assert np.array_equal(seen, mask), "some masked message never delivered"
+    # every slot was popped once: the channel is empty again
+    assert not _as_np(c["flag"]).any()
+    assert (_as_np(c["buf"]) == ch.NEG).all()
+
+
+def _collision_case(seed: int):
+    """Two same-tick sends landing in one slot merge elementwise-max —
+    the delivered message is one the protocol could have received later."""
+    rng = np.random.RandomState(seed)
+    pa = rng.uniform(0.0, 50.0, (N, N, P)).astype(np.float32)
+    pb = rng.uniform(0.0, 50.0, (N, N, P)).astype(np.float32)
+    ones = jnp.ones((N, N), jnp.bool_)
+    delay = jnp.full((N, N), 5, jnp.int32)
+    c = ch.make_channel(DMAX, N, P)
+    c = ch.send(c, jnp.int32(0), jnp.asarray(pa), delay, ones)
+    c = ch.send(c, jnp.int32(0), jnp.asarray(pb), delay, ones)
+    for t in range(1, 6):
+        c, flags, pay = ch.deliver(c, jnp.int32(t))
+        if t < 5:
+            assert not _as_np(flags).any()
+    assert _as_np(flags).all()
+    assert np.array_equal(_as_np(pay), np.maximum(pa, pb))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(0, 2 ** 16 - 1))
+    def test_send_deliver_roundtrip(seed):
+        _roundtrip_case(seed)
+
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(0, 2 ** 16 - 1))
+    def test_colliding_slots_merge_max(seed):
+        _collision_case(seed)
+else:
+    def test_send_deliver_roundtrip():
+        """Degraded fixed-case variant (hypothesis not installed)."""
+        for seed in (0, 1, 12345):
+            _roundtrip_case(seed)
+
+    def test_colliding_slots_merge_max():
+        """Degraded fixed-case variant (hypothesis not installed)."""
+        _collision_case(7)
+
+
+def test_horizon_edge_clips_to_dmax_minus_1():
+    """delay >= dmax is delivered at the horizon (dmax-1), never wraps into
+    an earlier slot; delay 0 is bumped to 1 (no same-tick delivery)."""
+    ones = jnp.ones((N, N), jnp.bool_)
+    pay = jnp.ones((N, N, P), jnp.float32)
+    for d in (0, DMAX - 1, DMAX, 3 * DMAX + 2):
+        c = ch.make_channel(DMAX, N, P)
+        c = ch.send(c, jnp.int32(0), pay, jnp.full((N, N), d, jnp.int32),
+                    ones)
+        expect_t = int(np.clip(d, 1, DMAX - 1))
+        for t in range(1, DMAX):
+            c, flags, _ = ch.deliver(c, jnp.int32(t))
+            assert _as_np(flags).any() == (t == expect_t), \
+                f"delay {d}: delivery at t={t}"
+
+
+def test_additive_channel_accumulates():
+    c = ch.make_channel(DMAX, N, 2, additive=True)
+    ones = jnp.ones((N, N), jnp.bool_)
+    pay = jnp.full((N, N, 2), 3.0, jnp.float32)
+    delay = jnp.full((N, N), 4, jnp.int32)
+    c = ch.send(c, jnp.int32(0), pay, delay, ones, additive=True)
+    c = ch.send(c, jnp.int32(0), pay, delay, ones, additive=True)
+    for t in range(1, 5):
+        c, flags, got = ch.deliver(c, jnp.int32(t))
+    assert _as_np(flags).all()
+    assert (np.asarray(got) == 6.0).all()
+
+
+def test_drop_mask_is_silent_omission():
+    """A dropped link delivers nothing; untouched links are unaffected —
+    byte-for-byte the same as an undropped send elsewhere."""
+    rng = np.random.RandomState(3)
+    pay = rng.uniform(0.0, 10.0, (N, N, P)).astype(np.float32)
+    ones = jnp.ones((N, N), jnp.bool_)
+    drop = np.zeros((N, N), bool)
+    drop[0, 1] = drop[2, 3] = True
+    delay = jnp.full((N, N), 2, jnp.int32)
+    c = ch.make_channel(DMAX, N, P)
+    c = ch.send(c, jnp.int32(0), jnp.asarray(pay), delay, ones,
+                drop=jnp.asarray(drop))
+    c, f1, _ = ch.deliver(c, jnp.int32(1))
+    c, f2, got = ch.deliver(c, jnp.int32(2))
+    assert not _as_np(f1).any()
+    assert np.array_equal(_as_np(f2), ~drop)
+    assert np.array_equal(_as_np(got)[~drop], pay[~drop])

@@ -1,0 +1,217 @@
+"""Scenario engine (repro/scenarios): primitive -> windowed-table lowering,
+the FaultSchedule compatibility shim (bitwise-equal env tables, so the
+fig 6-9 artifacts are unchanged by the netsim refactor), scenario grids
+batching through run_sweep as ONE compiled program, and the partition
+semantics the paper's robustness story hinges on (a cut minority stops
+committing; a healed one catches up)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.smr import SMRConfig
+from repro.core import experiment, netsim
+from repro.core.experiment import SweepSpec, run_sweep
+from repro.core.harness import run_sim
+from repro.core.netsim import FaultSchedule
+from repro.scenarios import (
+    BandwidthThrottle,
+    Crash,
+    GrayFailure,
+    Partition,
+    Recover,
+    Scenario,
+    TargetedDelay,
+    as_scenario,
+    from_fault_schedule,
+    library,
+    lower,
+)
+
+CFG = SMRConfig(sim_seconds=2.0)
+N = CFG.n_replicas
+
+
+# ---------------------------------------------------------------- shim ----
+
+def test_fault_schedule_ddos_tables_bitwise():
+    """The compiled shim reproduces the seed-era per-tick link_delay —
+    same seeded attacked-minority stream, same float32 arithmetic — which
+    is what keeps the fig 6-9 artifacts bitwise identical."""
+    fs = FaultSchedule(ddos=True, ddos_repick_s=0.5)
+    env = netsim.build_env(CFG, fs)
+    # seed-era reference, computed the way the old netsim did
+    rng = np.random.RandomState(fs.ddos_seed)
+    repick = max(1, int(fs.ddos_repick_s * 1000 / CFG.tick_ms))
+    w = int(np.ceil(CFG.sim_seconds / fs.ddos_repick_s)) + 1
+    att = np.zeros((w, N), bool)
+    for k in range(w):
+        att[k, rng.choice(N, size=(N - 1) // 2, replace=False)] = True
+    delays = np.asarray(CFG.delays_ms() / CFG.tick_ms, np.float32)
+    dd = np.float32(fs.ddos_attack_delay_ms / CFG.tick_ms)
+    for t in (0, 1, 499, 500, 999, 1000, 1500, 1999):
+        a = att[min(t // repick, w - 1)]
+        ref = delays + (a[:, None] | a[None, :]) * dd
+        np.testing.assert_array_equal(np.asarray(netsim.link_delay(env, t)),
+                                      ref, err_msg=f"t={t}")
+        assert np.asarray(netsim.link_drop(env, t)).sum() == 0
+
+
+def test_fault_schedule_crash_tables_bitwise():
+    crash = np.full(N, np.inf)
+    crash[0], crash[3] = 0.7, 1.2345
+    env = netsim.build_env(CFG, FaultSchedule(crash_time_s=crash))
+    crash_tick = crash * 1000.0 / CFG.tick_ms
+    for t in (0, 699, 700, 701, 1234, 1235, 1999):
+        np.testing.assert_array_equal(np.asarray(netsim.alive(env, t)),
+                                      t < crash_tick, err_msg=f"t={t}")
+
+
+def test_fault_schedule_equals_compiled_scenario_end_to_end():
+    """run_sim under the shim == run_sim under its compiled Scenario,
+    bit for bit (same env tables -> same program -> same metrics)."""
+    cfg = SMRConfig(sim_seconds=1.0)
+    fs = FaultSchedule(ddos=True, ddos_repick_s=0.5)
+    a = run_sim("mandator-sporades", cfg, rate_tx_s=20_000, faults=fs)
+    b = run_sim("mandator-sporades", cfg, rate_tx_s=20_000,
+                faults=from_fault_schedule(fs))
+    for k in ("throughput", "median_ms", "p99_ms", "committed"):
+        assert a[k] == b[k] or (np.isnan(a[k]) and np.isnan(b[k]))
+    np.testing.assert_array_equal(a["timeline"], b["timeline"])
+    np.testing.assert_array_equal(a["cvc_all"], b["cvc_all"])
+
+
+# ------------------------------------------------------------- lowering ----
+
+def test_crash_interval_and_recover():
+    """Crash is an interval (not a one-way trip); a later Recover wins."""
+    sc = Scenario("x", (Crash(0.5, targets=(1,), end_s=1.0),
+                        Crash(1.5, targets=(2,)),
+                        Recover(1.8, targets=(2,))))
+    env = netsim.build_env(CFG, sc)
+    up = lambda t: np.asarray(netsim.alive(env, t))  # noqa: E731
+    assert up(499).all()
+    assert up(500).tolist() == [True, False, True, True, True]
+    assert up(999).tolist() == [True, False, True, True, True]
+    assert up(1000).all()
+    assert up(1500).tolist() == [True, True, False, True, True]
+    assert up(1800).all()
+
+
+def test_targeted_delay_fixed_targets_and_throttle():
+    sc = Scenario("x", (TargetedDelay(delay_ms=100.0, targets="leader",
+                                      start_s=0.5, end_s=1.0),
+                        BandwidthThrottle(1.0, math.inf, scale=0.25,
+                                          targets=(3,))))
+    env = netsim.build_env(CFG, sc)
+    base = np.asarray(CFG.delays_ms() / CFG.tick_ms, np.float32)
+    d0 = np.asarray(netsim.link_delay(env, 0))
+    d7 = np.asarray(netsim.link_delay(env, 700))
+    np.testing.assert_array_equal(d0, base)
+    extra = np.zeros((N, N), np.float32)
+    extra[0, :] = extra[:, 0] = 100.0
+    np.testing.assert_array_equal(d7, base + extra)
+    full = float(np.asarray(netsim.nic_rate(env, 0))[3])
+    throttled = np.asarray(netsim.nic_rate(env, 1500))
+    assert throttled[3] == pytest.approx(full * 0.25)
+    assert (throttled[[0, 1, 2, 4]] == full).all()
+
+
+def test_gray_failure_deterministic_and_bounded():
+    sc = Scenario("g", (GrayFailure(0.0, 2.0, loss=0.2, jitter_ms=30.0,
+                                    redraw_s=0.25, seed=5),))
+    t1 = lower(CFG, sc)
+    t2 = lower(CFG, sc)
+    for k in ("drop", "extra_delay", "alive", "nic_scale", "win_of_tick"):
+        np.testing.assert_array_equal(t1[k], t2[k])
+    assert t1["extra_delay"].max() <= 30.0 / CFG.tick_ms
+    assert not t1["drop"].diagonal(axis1=1, axis2=2).any(), \
+        "gray failure must never cut self-links"
+    frac = t1["drop"][:, ~np.eye(N, dtype=bool)].mean()
+    assert 0.05 < frac < 0.5  # ~loss, across windows and links
+
+
+def test_static_delay_over_horizon_rejected():
+    with pytest.raises(ValueError, match="delay_horizon_ticks"):
+        netsim.build_env(CFG, Scenario("x", (
+            TargetedDelay(delay_ms=1e6, targets="minority"),)))
+
+
+def test_as_scenario_normalizes():
+    assert as_scenario(None).events == ()
+    s = Scenario("s")
+    assert as_scenario(s) is s
+    assert as_scenario(FaultSchedule()).events == ()
+    with pytest.raises(TypeError):
+        as_scenario(42)
+
+
+def test_library_compiles_and_stacks():
+    lib = library.scenarios(CFG.sim_seconds, N)
+    assert set(library.NAMES) == set(lib)
+    pad = max(netsim.env_windows(CFG, s) for s in lib.values())
+    envs = [netsim.build_env(CFG, s, pad) for s in lib.values()]
+    stacked = netsim.stack_envs(envs)
+    assert stacked["drop_tab"].shape == (len(lib), pad, N, N)
+    with pytest.raises(KeyError, match="unknown scenario"):
+        library.get("fig66", 2.0)
+
+
+# ------------------------------------------------- batched sweep + trace ----
+
+def test_scenario_grid_is_one_compiled_program():
+    """>=3 scenarios x >=2 rates through run_sweep: one trace, and each
+    point matches its single run_sim bitwise."""
+    cfg = SMRConfig(sim_seconds=1.0)
+    lib = library.scenarios(cfg.sim_seconds, N)
+    scens = (lib["baseline"], lib["symmetric-partition"], lib["gray-wan"])
+    spec = SweepSpec(rates=(10_000, 30_000), faults=scens)
+    experiment.reset_trace_counts()
+    grid = run_sweep("mandator-sporades", cfg, spec)
+    assert experiment.trace_counts()["mandator-sporades"] == 1, \
+        "a scenario grid must compile as ONE program"
+    assert len(grid) == 6
+    for r, (rate, seed, fi) in zip(grid, spec.points()):
+        single = run_sim("mandator-sporades", cfg, rate_tx_s=rate,
+                         faults=scens[fi], seed=seed)
+        for k in ("throughput", "median_ms", "p99_ms", "committed"):
+            assert r[k] == single[k] or (np.isnan(r[k])
+                                         and np.isnan(single[k]))
+        np.testing.assert_array_equal(r["timeline"], single["timeline"])
+
+
+# ------------------------------------------------------ partition physics ----
+
+def _cvc_sum(cvc_all: np.ndarray, replica: int, t: int) -> int:
+    return int(cvc_all[t, replica].sum())
+
+
+def test_partition_blocks_minority_then_heals():
+    """A partitioned minority stops committing once in-flight messages
+    drain; after the heal it catches back up. The majority side (which
+    keeps the view-0 leader) never stops."""
+    cfg = SMRConfig(sim_seconds=3.0)
+    minority, majority = (1, 2), (0, 3, 4)
+    cut = Partition(1.0, 2.0, (minority, majority))
+    healed = run_sim("mandator-sporades", cfg, rate_tx_s=20_000,
+                     faults=Scenario("heal", (cut,)))
+    cvc = np.asarray(healed["cvc_all"])
+    # in-flight drain margin: one max-RTT after the cut (~163 tick link)
+    stall0 = _cvc_sum(cvc, 1, 1500)
+    assert _cvc_sum(cvc, 1, 1999) == stall0, \
+        "cut minority kept committing"
+    assert _cvc_sum(cvc, 4, 1999) > _cvc_sum(cvc, 4, 1400), \
+        "majority stalled during the partition"
+    assert _cvc_sum(cvc, 1, 2999) > stall0, \
+        "minority did not recover after heal"
+    # and the healed run keeps end-to-end throughput
+    assert np.asarray(healed["timeline"])[-1] > 0
+
+    forever = run_sim("mandator-sporades", cfg, rate_tx_s=20_000,
+                      faults=Scenario("cut", (
+                          Partition(1.0, math.inf, (minority, majority)),)))
+    cvc2 = np.asarray(forever["cvc_all"])
+    assert _cvc_sum(cvc2, 1, 2999) == _cvc_sum(cvc2, 1, 1500), \
+        "permanently cut minority still advanced"
+    assert _cvc_sum(cvc2, 4, 2999) > _cvc_sum(cvc2, 4, 1500), \
+        "majority should out-run the permanent cut"
