@@ -38,6 +38,7 @@ def main() -> None:
         "fig8": lambda: figures.fig8_ddos(sim_s),
         "fig9": lambda: figures.fig9_scalability(max(sim_s - 1, 2.0)),
         "robustness": lambda: figures.robustness(sim_s),
+        "workload-matrix": lambda: figures.workload_matrix(sim_s),
         "paper": figures.paper_comparison,
         "kernels": kernel_bench,
         "roofline_single": lambda: roofline.rows("single"),

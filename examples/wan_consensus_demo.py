@@ -12,6 +12,14 @@ Scenario showcase — run any adversary from the curated library
 windows:
 
   PYTHONPATH=src python examples/wan_consensus_demo.py --scenario region-outage
+
+Workload showcase — run any traffic shape from the curated workload
+library (workloads/library.py) and watch where the latency is paid,
+region by region; composes with --scenario:
+
+  PYTHONPATH=src python examples/wan_consensus_demo.py --workload region-skew
+  PYTHONPATH=src python examples/wan_consensus_demo.py \\
+      --workload closed-loop --scenario paper-ddos
 """
 import argparse
 import sys
@@ -21,10 +29,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.configs.smr import SMRConfig
+from repro.configs.smr import REGIONS, SMRConfig
 from repro.core.experiment import SweepSpec, run_sweep
-from repro.core.netsim import FaultSchedule
+from repro.scenarios import Crash, Scenario
 from repro.scenarios import library
+from repro.workloads import library as workload_library
 
 
 def paper_tour() -> None:
@@ -41,10 +50,9 @@ def paper_tour() -> None:
               f"@ {r['median_ms']:6.0f} ms median")
 
     print("\n== leader crash at t=1.5s (Fig. 7) ==")
-    crash = np.full(5, np.inf)
-    crash[0] = 1.5
     spec = SweepSpec(rates=(100_000,),
-                     faults=(FaultSchedule(crash_time_s=crash),))
+                     faults=(Scenario("leader-crash",
+                                      (Crash(start_s=1.5, targets=(0,)),)),))
     for proto in ("mandator-sporades", "mandator-paxos"):
         r = run_sweep(proto, cfg, spec)[0]
         tl = "|".join(f"{x/1000:.0f}k" for x in r["timeline"])
@@ -78,14 +86,56 @@ def scenario_showcase(name: str, sim_s: float, rate: float) -> None:
               f"  per {bucket_s * 1000:.0f}ms bucket")
 
 
+def workload_showcase(wname: str, sname: str, sim_s: float,
+                      rate: float) -> None:
+    """Per-region view of a traffic shape (optionally under an adversary):
+    who commits how much, and where the latency is paid."""
+    cfg = SMRConfig(sim_seconds=sim_s)
+    n = cfg.n_replicas
+    wl = workload_library.get(wname, sim_s, n)
+    scen = library.get(sname, sim_s, n) if sname else None
+    closed = any(type(s).__name__ == "ClosedLoop" for s in wl.shapes)
+    print(f"== workload {wname!r}"
+          + (f" under scenario {sname!r}" if sname else "")
+          + f" ({sim_s:.0f}s sim, {rate:,.0f} tx/s "
+          + ("client-pool target" if closed else "offered") + ") ==")
+    spec = SweepSpec(rates=(rate,), faults=(scen,), workloads=(wl,))
+    for proto in ("mandator-sporades", "mandator-paxos"):
+        r = run_sweep(proto, cfg, spec)[0]
+        print(f"\n {proto}: {r['throughput']:,.0f} tx/s overall, "
+              f"median {r['median_ms']:.0f} ms, p99 {r['p99_ms']:.0f} ms")
+        lat_tl = np.asarray(r["origin_lat_ms_timeline"])   # [n, buckets]
+        tl = np.asarray(r["origin_timeline"])
+        bucket_s = sim_s / lat_tl.shape[1]
+        med = np.asarray(r["origin_median_ms"])
+        p99 = np.asarray(r["origin_p99_ms"])
+        infl = r.get("inflight_max")
+        for i in range(n):
+            cells = "|".join("   ." if not np.isfinite(x) else f"{x:4.0f}"
+                             for x in lat_tl[i])
+            extra = f"  max in-flight {infl[i]:5.0f}" if infl is not None \
+                else ""
+            print(f"   {REGIONS[i][:8]:8s} med {med[i]:6.0f} ms  "
+                  f"p99 {p99[i]:6.0f} ms  share {tl[i].sum() / max(tl.sum(), 1e-9):5.1%}{extra}")
+            print(f"            lat/ms  [{cells}]  per "
+                  f"{bucket_s * 1000:.0f}ms bucket")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="",
                     help=f"showcase one of: {', '.join(library.NAMES)}")
+    ap.add_argument("--workload", default="",
+                    help="per-region latency view of one of: "
+                         f"{', '.join(workload_library.NAMES)} "
+                         "(composes with --scenario)")
     ap.add_argument("--sim-seconds", type=float, default=4.0)
     ap.add_argument("--rate", type=float, default=100_000)
     args = ap.parse_args()
-    if args.scenario:
+    if args.workload:
+        workload_showcase(args.workload, args.scenario, args.sim_seconds,
+                          args.rate)
+    elif args.scenario:
         scenario_showcase(args.scenario, args.sim_seconds, args.rate)
     else:
         paper_tour()

@@ -19,16 +19,39 @@ when commits outpace 1/d_avg, execution latency diverges — reproducing the
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
 from repro.configs.smr import SMRConfig
-from repro.core.netsim import FaultSchedule
+from repro.workloads.analytic import (
+    TableRate,
+    closed_equilibrium_rate,
+    host_rate,
+)
 
 
-def run_epaxos_model(cfg: SMRConfig, rate_tx_s: float,
-                     faults: FaultSchedule) -> Dict:
+def run_epaxos_model(cfg: SMRConfig, rate_tx_s: float, faults=None,
+                     workload=None) -> Dict:
+    """``workload``: a repro.workloads.Workload (or None). Open-loop shapes
+    modulate the per-origin mean rate over time through the same compiled
+    table the simulator reads; a closed-loop workload is approximated at
+    its Little's-law equilibrium (run once open to measure latency, then
+    re-run at the rate the client pools actually sustain)."""
+    wl_rate, closed = host_rate(cfg, workload)
+    if closed is not None:
+        first = _epaxos_once(cfg, rate_tx_s, wl_rate)
+        rate_eff = closed_equilibrium_rate(rate_tx_s, closed,
+                                           first["median_ms"],
+                                           cfg.n_replicas)
+        out = _epaxos_once(cfg, rate_eff, wl_rate)
+        out["rate"] = rate_tx_s
+        return out
+    return _epaxos_once(cfg, rate_tx_s, wl_rate)
+
+
+def _epaxos_once(cfg: SMRConfig, rate_tx_s: float,
+                 wl_rate: Optional[TableRate] = None) -> Dict:
     n = cfg.n_replicas
     d = cfg.delays_ms()                      # one-way ms
     off = d + np.where(np.eye(n, dtype=bool), np.inf, 0)
@@ -47,28 +70,37 @@ def run_epaxos_model(cfg: SMRConfig, rate_tx_s: float,
     sim_ms = cfg.sim_seconds * 1000.0
     lam = rate_tx_s / n / 1000.0             # req per ms per replica
     batch = cfg.batch_epaxos
-    # generate instance streams
-    events = []                              # (create_ms, origin, count)
+    # generate instance streams; lam_i varies over time when the workload
+    # table is non-trivial (the exact constant-lam path otherwise)
+    events = []                    # (create_ms, commit_ms, origin, count, lam)
     for i in range(n):
         t, nxt = 0.0, 0.0
         while t < sim_ms:
-            fill_ms = batch / max(lam, 1e-9)
+            lam_t = lam if wl_rate is None else lam * float(wl_rate.at(t)[i])
+            if wl_rate is not None and lam_t <= 0.0:
+                # zero-rate window: no arrivals — resume the stream at the
+                # window's end instead of dividing by ~0 past the sim
+                t = max(wl_rate.next_change_ms(t), t + cfg.tick_ms)
+                continue
+            fill_ms = batch / max(lam_t, 1e-9)
             start = max(t, nxt)
-            create = start + min(fill_ms, cfg.max_batch_ms / 1 + batch / max(lam, 1e-9))
+            create = start + min(fill_ms, cfg.max_batch_ms / 1 + batch / max(lam_t, 1e-9))
             commit = create + slot_ms[i]
-            events.append((create, commit, i, min(batch, lam * max(fill_ms, cfg.max_batch_ms))))
+            events.append((create, commit, i,
+                           min(batch, lam_t * max(fill_ms, cfg.max_batch_ms)),
+                           lam_t))
             nxt = commit                     # sequential instances
             t = create
     events.sort(key=lambda e: e[1])
     exec_prev = 0.0
     lat, wt = [], []
     committed = 0.0
-    for create, commit, i, cnt in events:
+    for create, commit, i, cnt, lam_t in events:
         e = max(commit + d_max[i], exec_prev + p_slow * d_avg)
         exec_prev = e
         if e < sim_ms:
             committed += cnt
-            lat.append(e - create + batch / max(lam, 1e-9) / 2)
+            lat.append(e - create + batch / max(lam_t, 1e-9) / 2)
             wt.append(cnt)
     lat, wt = np.array(lat), np.array(wt)
     order = np.argsort(lat) if len(lat) else np.array([], int)
@@ -79,7 +111,7 @@ def run_epaxos_model(cfg: SMRConfig, rate_tx_s: float,
         p99 = float(lat[order][min(np.searchsorted(cum, 0.99), len(lat) - 1)])
     nbuck = int(np.ceil(sim_ms / 500.0))
     timeline = np.zeros(nbuck)
-    for create, commit, i, cnt in events:
+    for create, commit, i, cnt, _ in events:
         if commit < sim_ms:
             timeline[int(commit // 500)] += cnt
     return {"protocol": "epaxos", "rate": rate_tx_s,

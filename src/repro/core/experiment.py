@@ -1,25 +1,30 @@
-"""Batched experiment engine: an entire rate × seed × fault sweep grid as
-ONE compiled JAX program per protocol.
+"""Batched experiment engine: an entire workload × scenario × rate × seed
+sweep grid as ONE compiled JAX program per protocol.
 
 The paper's headline results (Figs. 6–9) are sweeps over arrival rate,
-protocol, and fault scenario. Instead of re-tracing the tick-level
+protocol, and fault scenario — and, beyond the paper, over *traffic shape*
+(``repro.workloads``). Instead of re-tracing the tick-level
 ``jax.lax.scan`` for every grid point, ``run_sweep`` lowers a ``SweepSpec``
 to a single ``jax.vmap``-over-scan dispatch:
 
   1. every scenario (or legacy ``FaultSchedule``) variant becomes an
      array-native env (``netsim.build_env`` with a common window-table
-     pad), stacked leaf-wise;
-  2. the cartesian grid is flattened to B points, each a (env, rate, seed)
-     triple gathered from the stacks;
+     pad), stacked leaf-wise — and every workload variant becomes a
+     windowed rate table (``workloads.lower``, same pad-and-stack trick);
+  2. the cartesian grid is flattened to B points, each an
+     (env, workload-table, rate, seed) tuple gathered from the stacks;
   3. ``harness.sim_point`` — scan *plus* on-device metric extraction — is
-     vmapped over the B axis and jitted once per (protocol, cfg, B) shape.
+     vmapped over the B axis and jitted once per
+     (protocol, cfg, workload-mode, B) shape.
 
 The analytic baselines (epaxos / rabia) have no tick loop; they are looped
-on the host behind the same API so callers can sweep any protocol.
+on the host behind the same API (time-varying rates come from the same
+compiled tables via ``workloads.analytic``) so callers can sweep any
+protocol.
 
 ``trace_counts()`` exposes how many times each protocol's program was traced
-— the equivalence test (tests/test_experiment.py) pins a whole grid to one
-trace.
+— the equivalence tests (tests/test_experiment.py, tests/test_workloads.py)
+pin a whole grid to one trace.
 """
 from __future__ import annotations
 
@@ -32,9 +37,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import workloads as wlc
 from repro.configs.smr import SMRConfig
 from repro.core import harness, netsim
-from repro.core.netsim import FaultSchedule
 
 ANALYTIC_PROTOCOLS = ("epaxos", "rabia")
 
@@ -52,86 +57,112 @@ def reset_trace_counts() -> None:
 
 @dataclass(frozen=True)
 class SweepSpec:
-    """A sweep grid: cartesian product of rates (tx/s), PRNG seeds, and
-    network-adversity variants — each entry of ``faults`` is a
-    ``repro.scenarios.Scenario`` or a legacy ``FaultSchedule`` (compiled to
-    one). ``points()`` yields the flattened grid in rate-major order as
-    (rate, seed, fault_index) — the same order ``run_sweep`` returns
-    results in."""
+    """A sweep grid: cartesian product of rates (tx/s), PRNG seeds,
+    network-adversity variants, and traffic-shape variants. Each entry of
+    ``faults`` is a ``repro.scenarios.Scenario`` or a legacy
+    ``FaultSchedule`` (compiled to one); each entry of ``workloads`` is a
+    ``repro.workloads.Workload`` (None = the §5.2 open-loop Poisson
+    baseline). ``points()`` yields the flattened grid in rate-major order
+    as (rate, seed, fault_index, workload_index) — the same order
+    ``run_sweep`` returns results in."""
     rates: Tuple[float, ...]
     seeds: Tuple[int, ...] = (0,)
-    faults: Tuple = (FaultSchedule(),)
+    faults: Tuple = (None,)
+    workloads: Tuple = (None,)
 
-    def points(self) -> Iterator[Tuple[float, int, int]]:
-        for rate, seed, fi in itertools.product(
-                self.rates, self.seeds, range(len(self.faults))):
-            yield float(rate), int(seed), fi
+    def points(self) -> Iterator[Tuple[float, int, int, int]]:
+        for rate, seed, fi, wi in itertools.product(
+                self.rates, self.seeds, range(len(self.faults)),
+                range(len(self.workloads))):
+            yield float(rate), int(seed), fi, wi
 
     @property
     def size(self) -> int:
-        return len(self.rates) * len(self.seeds) * len(self.faults)
+        return (len(self.rates) * len(self.seeds) * len(self.faults)
+                * len(self.workloads))
 
 
-@partial(jax.jit, static_argnames=("protocol", "cfg"))
-def _sweep_compiled(protocol: str, cfg: SMRConfig, env_b: Dict,
-                    rate_b: jax.Array, seed_b: jax.Array) -> Dict:
+@partial(jax.jit, static_argnames=("protocol", "cfg", "mode"))
+def _sweep_compiled(protocol: str, cfg: SMRConfig, mode: wlc.WorkloadMode,
+                    env_b: Dict, wl_b: Dict, rate_b: jax.Array,
+                    seed_b: jax.Array) -> Dict:
     # body executes only while tracing, so this counts compilations
     _TRACE_COUNTS[protocol] = _TRACE_COUNTS.get(protocol, 0) + 1
-    return jax.vmap(partial(harness.sim_point, protocol, cfg))(
-        env_b, rate_b, seed_b)
+    return jax.vmap(lambda env, wlt, rate, seed: harness.sim_point(
+        protocol, cfg, env, rate, seed, wlt, mode))(
+        env_b, wl_b, rate_b, seed_b)
 
 
-def _lower(cfg: SMRConfig, spec: SweepSpec
-           ) -> Tuple[List[Tuple[float, int, int]], Dict, jax.Array, jax.Array]:
-    """Flatten the grid to stacked per-point inputs (env leaves, rate, seed)."""
+def _lower(cfg: SMRConfig, spec: SweepSpec):
+    """Flatten the grid to stacked per-point inputs (env leaves, workload
+    table leaves, rate, seed) plus the static workload mode."""
     pts = list(spec.points())
     n_windows = max(netsim.env_windows(cfg, f) for f in spec.faults)
     stack = netsim.stack_envs(
         [netsim.build_env(cfg, f, n_windows) for f in spec.faults])
-    fidx = np.array([fi for _, _, fi in pts], np.int32)
+    fidx = np.array([fi for _, _, fi, _ in pts], np.int32)
     env_b = jax.tree.map(lambda x: x[fidx], stack)
+    wl_pad = max(wlc.compile.n_windows(cfg, w) for w in spec.workloads)
+    tabs = [wlc.lower(cfg, w, pad_windows=wl_pad) for w in spec.workloads]
+    mode = wlc.mode_of(tabs)
+    widx = np.array([wi for _, _, _, wi in pts], np.int32)
+    # win_start is host-side metadata (ragged across workloads); only the
+    # fixed-shape device tables ride into the compiled program
+    dev = [{k: v for k, v in t.items() if k != "win_start"} for t in tabs]
+    wl_b = jax.tree.map(
+        lambda *xs: jnp.asarray(np.stack(xs))[widx], *dev)
     # per-replica Poisson rate per tick, computed host-side in float64 so a
     # batched grid and a single run_sim see bit-identical inputs
     rate_b = jnp.asarray(
-        np.array([r for r, _, _ in pts], np.float64)
+        np.array([r for r, _, _, _ in pts], np.float64)
         * cfg.tick_ms / 1000.0 / cfg.n_replicas, jnp.float32)
-    seed_b = jnp.asarray([s for _, s, _ in pts], jnp.int32)
-    return pts, env_b, rate_b, seed_b
+    seed_b = jnp.asarray([s for _, s, _, _ in pts], jnp.int32)
+    return pts, mode, env_b, wl_b, rate_b, seed_b
 
 
 def run_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec) -> List[Dict]:
     """Run the whole grid; returns one result dict per point, in
     ``spec.points()`` order. Scan protocols execute as a single vmapped
     device dispatch; analytic baselines loop on the host."""
+    wl_names = [wlc.as_workload(w).name for w in spec.workloads]
     if protocol in ANALYTIC_PROTOCOLS:
         if protocol == "epaxos":
             from repro.core.epaxos import run_epaxos_model as model
         else:
             from repro.core.rabia import run_rabia_model as model
         out = []
-        for rate, seed, fi in spec.points():
-            r = model(cfg, rate, spec.faults[fi])
+        for rate, seed, fi, wi in spec.points():
+            r = model(cfg, rate, spec.faults[fi],
+                      workload=spec.workloads[wi])
             r["seed"] = seed
+            r["workload"] = wl_names[wi]
             out.append(r)
         return out
     if protocol not in harness.SCAN_PROTOCOLS:
         raise ValueError(protocol)
 
-    pts, env_b, rate_b, seed_b = _lower(cfg, spec)
-    out = jax.tree.map(np.asarray,
-                       _sweep_compiled(protocol, cfg, env_b, rate_b, seed_b))
+    pts, mode, env_b, wl_b, rate_b, seed_b = _lower(cfg, spec)
+    out = jax.tree.map(np.asarray, _sweep_compiled(
+        protocol, cfg, mode, env_b, wl_b, rate_b, seed_b))
     results: List[Dict] = []
-    for i, (rate, seed, fi) in enumerate(pts):
+    for i, (rate, seed, fi, wi) in enumerate(pts):
         r: Dict = {"protocol": protocol, "rate": rate, "seed": seed,
+                   "workload": wl_names[wi],
                    "throughput": float(out["throughput"][i]),
                    "median_ms": float(out["median_ms"][i]),
                    "p99_ms": float(out["p99_ms"][i]),
                    "committed": float(out["committed"][i]),
-                   "timeline": out["timeline"][i]}
+                   "timeline": out["timeline"][i],
+                   "origin_median_ms": out["origin_median_ms"][i],
+                   "origin_p99_ms": out["origin_p99_ms"][i],
+                   "origin_timeline": out["origin_timeline"][i],
+                   "origin_lat_ms_timeline": out["origin_lat_ms_timeline"][i]}
         if protocol == "mandator-sporades":
             r["async_frac"] = float(out["async_frac"][i])
             r["views"] = int(out["views"][i])
             r["cvc_all"] = out["cvc_all"][i]
             r["commit_key"] = out["commit_key"][i]
+        if "inflight_max" in out:
+            r["inflight_max"] = out["inflight_max"][i]
         results.append(r)
     return results

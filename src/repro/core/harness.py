@@ -25,25 +25,74 @@ import numpy as np
 
 from repro.configs.smr import SMRConfig
 from repro.core import mandator, netsim, paxos, sporades
+from repro.workloads.compile import TRIVIAL_MODE, WorkloadMode
 
 SCAN_PROTOCOLS = ("mandator-sporades", "mandator-paxos", "multipaxos",
                   "mandator")
 
 
+def _closed_feedback(protocol: str, carry: Dict, out: Dict) -> Dict:
+    """Closed-loop commit feedback, inside the scan carry: a request is in
+    flight from Poisson submission until the batch carrying it commits.
+    ``cl_done`` is the cumulative per-origin committed request count,
+    recovered from the batch records and the protocol's committed rounds
+    (both monotone, so no per-round event bookkeeping is needed)."""
+    wl_key = "p" if protocol == "multipaxos" else "m"
+    carry = dict(carry)
+    carry[wl_key] = dict(carry[wl_key])
+    wl = dict(carry[wl_key]["wl"])
+    if protocol == "mandator":
+        cvc_o = carry["m"]["own_round"]
+    elif protocol == "mandator-sporades":
+        cvc_o = jnp.max(carry["s"]["cvc"], axis=0)
+    elif protocol == "mandator-paxos":
+        cvc_o = jnp.max(carry["p"]["cvc"], axis=0)
+    else:
+        cvc_o = carry["p"]["committed_slot"]
+    # cumulative committed count = the prefix sum at the committed round
+    # (rounds are formed and committed in order per row)
+    r_max = wl["batch_count_cum"].shape[1]
+    n = cvc_o.shape[0]
+    done = wl["batch_count_cum"][jnp.arange(n),
+                                 jnp.clip(cvc_o, 0, r_max - 1)]
+    if protocol == "multipaxos":
+        # batch rows live at the (rotating) leader, not the submitting
+        # origin, so per-origin completion is unknowable: apportion the
+        # global committed total (monotone) pro-rata by cumulative
+        # submissions. The aggregate is exact; the per-origin split is an
+        # estimate that may move as shares shift, so no per-origin
+        # ratchet — a maximum here would overcount done and silently
+        # admit requests past the cap. (Requests forwarded to a dead
+        # leader stay in flight; client retry is not modeled, DESIGN.md §8.)
+        share = wl["cl_submitted"] / jnp.maximum(
+            jnp.sum(wl["cl_submitted"]), 1.0)
+        done = jnp.sum(done) * share
+        wl["cl_done"] = jnp.clip(done, 0.0, wl["cl_submitted"])
+    else:
+        wl["cl_done"] = jnp.clip(jnp.maximum(wl["cl_done"], done),
+                                 0.0, wl["cl_submitted"])
+    carry[wl_key]["wl"] = wl
+    out["inflight"] = wl["cl_submitted"] - wl["cl_done"]
+    return carry
+
+
 def _scan_body(protocol: str, cfg: SMRConfig, n_ticks: int,
-               rate_per_tick: jax.Array, env: Dict, seed: jax.Array):
-    """The tick loop. protocol/cfg/n_ticks are static; rate_per_tick, env
-    leaves, and seed may be traced (and batched by vmap)."""
+               rate_per_tick: jax.Array, env: Dict, seed: jax.Array,
+               wlt: Dict | None = None,
+               mode: WorkloadMode = TRIVIAL_MODE):
+    """The tick loop. protocol/cfg/n_ticks/mode are static; rate_per_tick,
+    env and wlt leaves, and seed may be traced (and batched by vmap)."""
     uses_mandator = protocol in ("mandator-sporades", "mandator-paxos",
                                  "mandator")
     st = {}
     if uses_mandator:
-        st["m"] = mandator.init_state(cfg, n_ticks)
+        st["m"] = mandator.init_state(cfg, n_ticks, closed=mode.closed)
     if protocol == "mandator-sporades":
         st["s"] = sporades.init_state(cfg, n_ticks)
     if protocol in ("mandator-paxos", "multipaxos"):
         st["p"] = paxos.init_state(cfg, n_ticks,
-                                   mandator_mode=(protocol == "mandator-paxos"))
+                                   mandator_mode=(protocol == "mandator-paxos"),
+                                   closed=mode.closed)
     base_key = jax.random.PRNGKey(seed)
 
     def step(carry, t):
@@ -52,7 +101,7 @@ def _scan_body(protocol: str, cfg: SMRConfig, n_ticks: int,
         if uses_mandator:
             carry = dict(carry)
             carry["m"] = mandator.tick(carry["m"], t, key, env, cfg,
-                                       rate_per_tick)
+                                       rate_per_tick, wlt, mode)
             lcr = mandator.get_client_requests(carry["m"])
             out["own_round"] = carry["m"]["own_round"]
         if protocol == "mandator-sporades":
@@ -69,8 +118,10 @@ def _scan_body(protocol: str, cfg: SMRConfig, n_ticks: int,
         elif protocol == "multipaxos":
             carry = dict(carry)
             carry["p"] = paxos.tick(carry["p"], t, key, env, cfg,
-                                    rate_per_tick, False)
+                                    rate_per_tick, False, wlt=wlt, mode=mode)
             out["committed_slot"] = carry["p"]["committed_slot"]
+        if mode.closed:
+            carry = _closed_feedback(protocol, carry, out)
         return carry, out
 
     st, trace = jax.lax.scan(step, st, jnp.arange(n_ticks, dtype=jnp.int32))
@@ -110,12 +161,30 @@ def _batch_metrics(cfg: SMRConfig, create_t, arr_mean, count, commit_t,
     nbuck = int(np.ceil(n_ticks * cfg.tick_ms / bucket_ms))
     b = jnp.where(ok, commit_t * (cfg.tick_ms / bucket_ms), 0.0
                   ).astype(jnp.int32).clip(0, nbuck - 1)
-    timeline = jnp.zeros((nbuck,)).at[b.ravel()].add(
-        jnp.where(ok, count, 0.0).ravel())
+    cnt_ok = jnp.where(ok, count, 0.0)
+    timeline = jnp.zeros((nbuck,)).at[b.ravel()].add(cnt_ok.ravel())
     timeline = timeline / (bucket_ms / 1000.0)
+    # per-origin client-perceived latency: where is the latency paid?
+    # (rows are submitting origins for the mandator-family protocols;
+    # for multipaxos they are the leader that formed the slot batch)
+    n = count.shape[0]
+    w_o = jnp.where(in_win, count, 0.0)                       # [n, R]
+    med_o = jax.vmap(lambda v, ww: _weighted_quantile(v, ww, 0.5))(
+        lat_ms, w_o)
+    p99_o = jax.vmap(lambda v, ww: _weighted_quantile(v, ww, 0.99))(
+        lat_ms, w_o)
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], b.shape)
+    tl_o = jnp.zeros((n, nbuck)).at[rows, b].add(cnt_ok)
+    lat_sum = jnp.zeros((n, nbuck)).at[rows, b].add(
+        cnt_ok * jnp.where(ok, lat_ms, 0.0))
+    lat_tl_o = jnp.where(tl_o > 0, lat_sum / jnp.maximum(tl_o, 1e-9),
+                         jnp.nan)
     return {"throughput": tput, "median_ms": med, "p99_ms": p99,
             "timeline": timeline,
-            "committed": jnp.sum(jnp.where(ok, count, 0.0))}
+            "committed": jnp.sum(cnt_ok),
+            "origin_median_ms": med_o, "origin_p99_ms": p99_o,
+            "origin_timeline": tl_o / (bucket_ms / 1000.0),
+            "origin_lat_ms_timeline": lat_tl_o}
 
 
 def _vc_commit_ticks(cvc_trace: jax.Array, r_max: int) -> jax.Array:
@@ -134,11 +203,16 @@ def _vc_commit_ticks(cvc_trace: jax.Array, r_max: int) -> jax.Array:
 
 
 def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
-              rate_per_tick: jax.Array, seed: jax.Array) -> Dict:
+              rate_per_tick: jax.Array, seed: jax.Array,
+              wlt: Dict | None = None,
+              mode: WorkloadMode = TRIVIAL_MODE) -> Dict:
     """One grid point, traceable end-to-end: tick scan + on-device metric
-    extraction. Returns a dict of arrays (scalars unless noted)."""
+    extraction. Returns a dict of arrays (scalars unless noted). ``wlt``
+    is the compiled workload table (ignored when mode.trivial); ``mode``
+    is static and must match how wlt was compiled."""
     n_ticks = netsim.sim_ticks(cfg)
-    st, trace = _scan_body(protocol, cfg, n_ticks, rate_per_tick, env, seed)
+    st, trace = _scan_body(protocol, cfg, n_ticks, rate_per_tick, env, seed,
+                           wlt, mode)
     if protocol == "mandator":
         # dissemination completion = "commit" for availability accounting
         wl, cvc = st["m"]["wl"], trace["own_round"]
@@ -157,14 +231,17 @@ def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
         out["views"] = jnp.max(trace["v_cur"])
         out["cvc_all"] = trace["cvc_all"]          # [ticks, n, n]
         out["commit_key"] = trace["commit_key"]    # [ticks, n]
+    if mode.closed:
+        out["inflight_max"] = jnp.max(trace["inflight"], axis=0)   # [n]
     return out
 
 
 def run_sim(protocol: str, cfg: SMRConfig, rate_tx_s: float,
-            faults=None, seed: int = 0) -> Dict:
+            faults=None, seed: int = 0, workload=None) -> Dict:
     """Single-point wrapper over the batched engine (experiment.run_sweep).
-    faults: a repro.scenarios.Scenario or legacy FaultSchedule (or None)."""
+    faults: a repro.scenarios.Scenario or legacy FaultSchedule (or None).
+    workload: a repro.workloads.Workload (or None for the §5.2 baseline)."""
     from repro.core.experiment import SweepSpec, run_sweep
     spec = SweepSpec(rates=(float(rate_tx_s),), seeds=(int(seed),),
-                     faults=(faults,))
+                     faults=(faults,), workloads=(workload,))
     return run_sweep(protocol, cfg, spec)[0]

@@ -25,11 +25,11 @@ from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim, workload
 
-def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
+def init_state(cfg: SMRConfig, n_ticks: int, closed: bool = False) -> Dict:
     n = cfg.n_replicas
     dmax = cfg.delay_horizon_ticks
     return {
-        "wl": workload.init_workload(cfg, n_ticks),
+        "wl": workload.init_workload(cfg, n_ticks, closed=closed),
         "own_round": jnp.zeros((n,), jnp.int32),       # last completed round
         "formed_round": jnp.zeros((n,), jnp.int32),    # last formed round
         "lcr": jnp.zeros((n, n), jnp.int32),           # i's lastCompletedRounds
@@ -42,7 +42,8 @@ def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
 
 
 def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
-         rate_per_tick: jax.Array) -> Dict:
+         rate_per_tick: jax.Array, wlt: Dict | None = None,
+         mode: workload.WorkloadMode = workload.TRIVIAL_MODE) -> Dict:
     n = cfg.n_replicas
     f = (n - 1) // 2
     quorum = n - f
@@ -52,7 +53,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     st = dict(st)
 
     # 1) client arrivals + cpu refill
-    wl = workload.arrive(st["wl"], key, t, rate_per_tick, alive)
+    wl = workload.arrive(st["wl"], key, t, rate_per_tick, alive, wlt, mode)
     wl = workload.refill_cpu(wl, env["cpu_req_per_tick"])
 
     # 2) deliver <new-Mandator-batch>: update seen rounds + lcr, send votes

@@ -23,6 +23,7 @@ bitwise-identical tables pinned by tests/test_scenarios.py.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence
 
@@ -35,8 +36,8 @@ from repro.configs.smr import SMRConfig
 
 @dataclass(frozen=True)
 class FaultSchedule:
-    """DEPRECATED shim over repro.scenarios (kept so seed-era callers and
-    the fig 6-9 benchmarks keep their exact semantics).
+    """DEPRECATED shim over repro.scenarios (kept so seed-era callers keep
+    their exact semantics; the fig 6-9 benchmarks now pass Scenarios).
 
     crash_time_s[i] — replica i stops at that time (inf = never).
     ddos: if enabled, every ``repick_s`` seconds a random minority set is
@@ -46,6 +47,15 @@ class FaultSchedule:
     ddos_attack_delay_ms: float = 800.0
     ddos_repick_s: float = 2.0
     ddos_seed: int = 7
+
+    def __post_init__(self):
+        warnings.warn(
+            "netsim.FaultSchedule is deprecated; pass a "
+            "repro.scenarios.Scenario (see scenarios.from_fault_schedule "
+            "for the exact-equivalent compilation)",
+            # 3, not 2: __post_init__ is called by the generated __init__,
+            # so 2 would attribute the warning to dataclass-generated code
+            DeprecationWarning, stacklevel=3)
 
 
 def sim_ticks(cfg: SMRConfig) -> int:

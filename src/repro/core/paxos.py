@@ -36,11 +36,13 @@ def _phase1_ticks(cfg: SMRConfig) -> jnp.ndarray:
     return jnp.asarray(rtts, jnp.float32)
 
 
-def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool) -> Dict:
+def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool,
+               closed: bool = False) -> Dict:
     n = cfg.n_replicas
     dmax = cfg.delay_horizon_ticks
     return {
-        "wl": workload.init_workload(cfg, n_ticks),
+        "wl": workload.init_workload(cfg, n_ticks,
+                                     closed=closed and not mandator_mode),
         "view": jnp.zeros((n,), jnp.int32),
         "last_heard": jnp.zeros((n,), jnp.float32),
         "ready_at": jnp.zeros((n,), jnp.float32),
@@ -60,7 +62,8 @@ def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool) -> Dict:
 
 def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
          rate_per_tick: jax.Array, mandator_mode: bool,
-         lcr: jax.Array | None = None) -> Dict:
+         lcr: jax.Array | None = None, wlt: Dict | None = None,
+         mode: workload.WorkloadMode = workload.TRIVIAL_MODE) -> Dict:
     n = cfg.n_replicas
     maj = n // 2 + 1
     alive = netsim.alive(env, t)
@@ -80,7 +83,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     # ---- request forwarding (plain mode) ----------------------------------
     fw_ch = st["fw_ch"]
     if not mandator_mode:
-        wl = workload.arrive(wl, key, t, rate_per_tick, alive)
+        wl = workload.arrive(wl, key, t, rate_per_tick, alive, wlt, mode)
         # forward whole local buffer to my current leader
         cnt = wl["buffer"]
         tsum = wl["buffer_tsum"]

@@ -14,16 +14,38 @@ RTTs. We simulate slot-by-slot over the real batch streams:
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
 from repro.configs.smr import SMRConfig
-from repro.core.netsim import FaultSchedule
+from repro.workloads.analytic import (
+    TableRate,
+    closed_equilibrium_rate,
+    host_rate,
+)
 
 
-def run_rabia_model(cfg: SMRConfig, rate_tx_s: float,
-                    faults: FaultSchedule) -> Dict:
+def run_rabia_model(cfg: SMRConfig, rate_tx_s: float, faults=None,
+                    workload=None) -> Dict:
+    """``workload``: a repro.workloads.Workload (or None). Open-loop shapes
+    make the batch streams time-varying through the compiled rate table;
+    closed-loop pools are approximated at their Little's-law equilibrium
+    (measure latency open, re-run at the sustainable rate)."""
+    wl_rate, closed = host_rate(cfg, workload)
+    if closed is not None:
+        first = _rabia_once(cfg, rate_tx_s, wl_rate)
+        rate_eff = closed_equilibrium_rate(rate_tx_s, closed,
+                                           first["median_ms"],
+                                           cfg.n_replicas)
+        out = _rabia_once(cfg, rate_eff, wl_rate)
+        out["rate"] = rate_tx_s
+        return out
+    return _rabia_once(cfg, rate_tx_s, wl_rate)
+
+
+def _rabia_once(cfg: SMRConfig, rate_tx_s: float,
+                wl_rate: Optional[TableRate] = None) -> Dict:
     n = cfg.n_replicas
     d = cfg.delays_ms()
     maj = n // 2 + 1
@@ -39,9 +61,15 @@ def run_rabia_model(cfg: SMRConfig, rate_tx_s: float,
     for i in range(n):
         t = 0.0
         while t < sim_ms:
-            fill = max(batch / max(lam, 1e-9), cfg.max_batch_ms)
+            lam_t = lam if wl_rate is None else lam * float(wl_rate.at(t)[i])
+            if wl_rate is not None and lam_t <= 0.0:
+                # zero-rate window: no arrivals — resume the stream at the
+                # window's end instead of dividing by ~0 past the sim
+                t = max(wl_rate.next_change_ms(t), t + cfg.tick_ms)
+                continue
+            fill = max(batch / max(lam_t, 1e-9), cfg.max_batch_ms)
             t += fill
-            streams.append((t, i, min(batch, lam * fill)))
+            streams.append((t, i, min(batch, lam_t * fill)))
     streams.sort()
     committed = 0.0
     lat, wt = [], []

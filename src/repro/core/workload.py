@@ -1,4 +1,16 @@
-"""Open-loop Poisson workload (§5.2) + batch bookkeeping.
+"""Client arrivals (open- or closed-loop) + batch bookkeeping.
+
+Arrivals are Poisson per tick per origin. The mean comes from one of two
+statically-selected paths (``repro.workloads.WorkloadMode``):
+
+  trivial — the seed-era §5.2 baseline: ``rate_per_tick`` broadcast to all
+            origins, instruction-identical to the original scalar path
+            (what keeps the fig 6-9 artifacts byte-identical);
+  table   — ``rate_per_tick x rate_of[win_of_tick[t]]`` from a compiled
+            ``repro.workloads`` rate table; in closed mode the table
+            instead sizes geo-placed client pools (Little's law) whose
+            submission rate is gated on in-flight requests and capped at
+            ``cap`` outstanding per origin.
 
 Batch records are global arrays indexed [origin, round]:
   create_t   — tick when the batch was formed
@@ -6,20 +18,24 @@ Batch records are global arrays indexed [origin, round]:
   count      — number of requests in the batch
 Commit times are reconstructed post-hoc from the per-tick committed-VC
 trace (searchsorted), so the hot loop never touches [n, R_MAX] arrays.
+The closed-loop in-flight decrement at commit lives in the scan step
+(harness._scan_body), which owns the commit signal.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.smr import SMRConfig
+from repro.workloads.compile import TRIVIAL_MODE, WorkloadMode
 
 
-def init_workload(cfg: SMRConfig, n_ticks: int) -> Dict[str, jax.Array]:
+def init_workload(cfg: SMRConfig, n_ticks: int,
+                  closed: bool = False) -> Dict[str, jax.Array]:
     n = cfg.n_replicas
-    return {
+    wl = {
         "buffer": jnp.zeros((n,), jnp.float32),        # pending request count
         "buffer_tsum": jnp.zeros((n,), jnp.float32),   # sum of arrival ticks
         "last_batch_t": jnp.zeros((n,), jnp.float32),
@@ -28,14 +44,40 @@ def init_workload(cfg: SMRConfig, n_ticks: int) -> Dict[str, jax.Array]:
         "batch_arr_mean": jnp.zeros((n, n_ticks), jnp.float32),
         "batch_count": jnp.zeros((n, n_ticks), jnp.float32),
     }
+    if closed:
+        wl["cl_submitted"] = jnp.zeros((n,), jnp.float32)
+        wl["cl_done"] = jnp.zeros((n,), jnp.float32)
+        # running prefix sum of batch_count by round (written at formation,
+        # rounds are formed in order) so the commit feedback is an O(n)
+        # gather per tick instead of an O(n x n_ticks) masked reduction
+        wl["batch_count_cum"] = jnp.zeros((n, n_ticks), jnp.float32)
+    return wl
 
 
 def arrive(wl: Dict, key: jax.Array, t: jax.Array, rate_per_tick: jax.Array,
-           alive: jax.Array) -> Dict:
-    """Poisson arrivals this tick at each replica's colocated clients."""
-    lam = jnp.broadcast_to(rate_per_tick, alive.shape)
-    cnt = jax.random.poisson(key, lam).astype(jnp.float32) * alive
+           alive: jax.Array, wlt: Optional[Dict] = None,
+           mode: WorkloadMode = TRIVIAL_MODE) -> Dict:
+    """Poisson arrivals this tick at each origin's clients. ``wlt`` is the
+    compiled workload table (required unless mode.trivial)."""
     wl = dict(wl)
+    if mode.trivial:
+        lam = jnp.broadcast_to(rate_per_tick, alive.shape)
+        cnt = jax.random.poisson(key, lam).astype(jnp.float32) * alive
+    else:
+        mult = wlt["rate_of"][wlt["win_of_tick"][t]]           # [n]
+        lam = rate_per_tick * mult
+        if mode.closed:
+            # pool size via Little's law at the sweep rate; submission is
+            # gated on requests still in flight and capped at `cap`
+            inflight = wl["cl_submitted"] - wl["cl_done"]
+            clients = rate_per_tick * wlt["think_ticks"] * mult
+            lam_cl = jnp.clip(clients - inflight, 0.0) / wlt["think_ticks"]
+            lam = jnp.where(wlt["closed"] > 0, lam_cl, lam)
+        cnt = jax.random.poisson(key, lam).astype(jnp.float32) * alive
+        if mode.closed:
+            room = jnp.clip(wlt["cap"] - inflight, 0.0)
+            cnt = jnp.where(wlt["closed"] > 0, jnp.minimum(cnt, room), cnt)
+            wl["cl_submitted"] = wl["cl_submitted"] + cnt
     wl["buffer"] = wl["buffer"] + cnt
     wl["buffer_tsum"] = wl["buffer_tsum"] + cnt * t
     return wl
@@ -71,6 +113,11 @@ def form_batches(wl: Dict, t: jax.Array, can_form: jax.Array,
     wl["batch_arr_mean"] = wl["batch_arr_mean"].at[rows, idx].add(
         jnp.where(formed, arr_mean, 0.0))
     wl["batch_count"] = wl["batch_count"].at[rows, idx].add(count)
+    if "batch_count_cum" in wl:
+        prev = wl["batch_count_cum"][rows, jnp.maximum(idx - 1, 0)]
+        wl["batch_count_cum"] = wl["batch_count_cum"].at[rows, idx].set(
+            jnp.where(formed, prev + count,
+                      wl["batch_count_cum"][rows, idx]))
     wl["buffer"] = wl["buffer"] - count
     wl["buffer_tsum"] = wl["buffer_tsum"] - tsum_taken
     wl["cpu_tokens"] = wl["cpu_tokens"] - count

@@ -32,7 +32,7 @@ def test_grid_matches_sequential_run_sim(protocol):
     assert experiment.trace_counts()[protocol] == 1, \
         "a whole grid must compile as ONE program"
     assert len(grid) == spec.size == 6
-    for r, (rate, seed, _) in zip(grid, spec.points()):
+    for r, (rate, seed, _, _) in zip(grid, spec.points()):
         assert (r["rate"], r["seed"]) == (rate, seed)
         _assert_point_equal(r, run_sim(protocol, CFG, rate_tx_s=rate,
                                        seed=seed))
@@ -49,7 +49,7 @@ def test_fault_variants_stack_into_one_program():
     experiment.reset_trace_counts()
     grid = run_sweep("mandator-sporades", CFG, spec)
     assert experiment.trace_counts()["mandator-sporades"] == 1
-    for r, (rate, seed, fi) in zip(grid, spec.points()):
+    for r, (rate, seed, fi, _) in zip(grid, spec.points()):
         single = run_sim("mandator-sporades", CFG, rate_tx_s=rate,
                          faults=faults[fi], seed=seed)
         _assert_point_equal(r, single)

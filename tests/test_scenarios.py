@@ -171,7 +171,7 @@ def test_scenario_grid_is_one_compiled_program():
     assert experiment.trace_counts()["mandator-sporades"] == 1, \
         "a scenario grid must compile as ONE program"
     assert len(grid) == 6
-    for r, (rate, seed, fi) in zip(grid, spec.points()):
+    for r, (rate, seed, fi, _) in zip(grid, spec.points()):
         single = run_sim("mandator-sporades", cfg, rate_tx_s=rate,
                          faults=scens[fi], seed=seed)
         for k in ("throughput", "median_ms", "p99_ms", "committed"):
