@@ -14,8 +14,8 @@ Row = Tuple[str, float, str]
 
 
 def _time(fn, *args, reps: int = 5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # warm up (compile) exactly once; block_until_ready handles pytrees
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
@@ -64,4 +64,68 @@ def bench() -> List[Row]:
     f_ssm = jax.jit(lambda *a: mamba_ssm(*a, chunk=128))
     rows.append(("kernel/ssm_scan_2048x512", _time(f_ssm, xs, dt, B, C, A, D),
                  f"state_vmem_kb={256*n*4/1024:.0f}"))
+    return rows
+
+
+def bench_channel(ticks: int = 200) -> List[Row]:
+    """Packed channel ring vs the seed per-channel substrate: one scanned
+    tick loop of sporades-shaped traffic (6 channels, broadcast sends) per
+    substrate, at the auto-resolved baseline horizon and the seed-era 2048.
+    Rows report us per simulated tick; run.py also drops the comparison
+    into benchmarks/artifacts/channel_bench.json."""
+    import jax.numpy as jnp
+
+    from repro.core import channel as ch
+    from repro.core import sporades
+
+    n = 5
+    spec = sporades.ring_spec(n)
+    widths = [(c.name, c.width) for c in spec.channels]
+    key = jax.random.PRNGKey(0)
+    delays = jax.random.randint(jax.random.PRNGKey(1), (n, n), 1, 170
+                                ).astype(jnp.int32)
+    payloads = {name: jax.random.uniform(jax.random.fold_in(key, i),
+                                         (n, n, w), jnp.float32, 0.0, 9.0)
+                for i, (name, w) in enumerate(widths)}
+    mask = jnp.ones((n, n), jnp.bool_)
+
+    def legacy_loop(dmax):
+        chans = {name: ch.make_channel(dmax, n, w) for name, w in widths}
+
+        def step(carry, t):
+            out = 0.0
+            new = {}
+            for name, _ in widths:
+                c, fl, pay = ch.deliver(carry[name], t)
+                c = ch.send(c, t, payloads[name], delays, mask)
+                out = out + jnp.sum(pay) + jnp.sum(fl)
+                new[name] = c
+            return new, out
+
+        return jax.lax.scan(step, chans, jnp.arange(ticks, dtype=jnp.int32))
+
+    def packed_loop(dmax):
+        ring = ch.make_ring(spec, dmax, n)
+
+        def step(carry, t):
+            msgs = ch.ring_deliver(spec, carry, t)
+            out = sum(jnp.sum(p) + jnp.sum(f) for f, p in msgs.values())
+            sends = [ch.Send(name, payloads[name], delays, mask)
+                     for name, _ in widths]
+            # "auto" = what the simulator dispatches: Pallas kernel on
+            # TPU, jnp scatter oracle elsewhere
+            return ch.ring_commit(spec, carry, t, sends,
+                                  backend="auto"), out
+
+        return jax.lax.scan(step, ring, jnp.arange(ticks, dtype=jnp.int32))
+
+    rows: List[Row] = []
+    for dmax in (256, 2048):
+        t_leg = _time(jax.jit(lambda d=dmax: legacy_loop(d))) / ticks
+        t_pak = _time(jax.jit(lambda d=dmax: packed_loop(d))) / ticks
+        rows.append((f"channel/legacy_D{dmax}", t_leg,
+                     f"substrate=per-channel;n={n};channels={len(widths)}"))
+        rows.append((f"channel/packed_D{dmax}", t_pak,
+                     f"substrate=packed-ring;n={n};K={spec.k};"
+                     f"speedup={t_leg / t_pak:.2f}x"))
     return rows

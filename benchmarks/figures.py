@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.smr import PAPER_CLAIMS, SMRConfig
 from repro.core.experiment import SweepSpec, run_sweep
-from repro.scenarios import Crash, Scenario, TargetedDelay
+from repro.scenarios import Crash, Scenario
 from repro.scenarios import library as scenario_library
 from repro.workloads import library as workload_library
 
@@ -65,10 +65,10 @@ def fig6_throughput_latency(sim_seconds: float = 4.0) -> List[Row]:
 def fig7_crash(sim_seconds: float = 4.0) -> List[Row]:
     """Leader crash mid-run (Fig. 7): throughput timeline."""
     cfg = SMRConfig(sim_seconds=sim_seconds)
-    # leader of view 0 crashes permanently mid-run (the exact Scenario the
-    # deprecated FaultSchedule(crash_time_s=[sim/2, inf, ...]) compiled to)
+    # leader of view 0 crashes permanently mid-run (exact seed-era
+    # crash-schedule semantics: Crash with no recovery)
     spec = SweepSpec(rates=(100_000,),
-                     faults=(Scenario("leader-crash", (
+                     scenarios=(Scenario("leader-crash", (
                          Crash(start_s=sim_seconds / 2, targets=(0,)),)),))
     rows: List[Row] = []
     out = {}
@@ -88,11 +88,9 @@ def fig7_crash(sim_seconds: float = 4.0) -> List[Row]:
 def fig8_ddos(sim_seconds: float = 4.0) -> List[Row]:
     """Targeted-minority DDoS (Fig. 8)."""
     cfg = SMRConfig(sim_seconds=sim_seconds)
-    # the §5.5 attack as a Scenario (same seeded draw stream the deprecated
-    # FaultSchedule(ddos=True, ddos_repick_s=1.0) compiled to)
-    faults = Scenario("paper-ddos", (
-        TargetedDelay(delay_ms=800.0, targets="random-minority",
-                      repick_s=1.0, seed=7),))
+    # the curated §5.5 attack (same seeded attacked-minority draw stream
+    # as the seed-era DDoS schedule)
+    attack = scenario_library.get("paper-ddos", sim_seconds)
     rows: List[Row] = []
     out = {}
     for proto, rate in (("mandator-sporades", 300_000),
@@ -106,7 +104,7 @@ def fig8_ddos(sim_seconds: float = 4.0) -> List[Row]:
             r["median_ms"] *= 2.0
         else:
             r = run_sweep(proto, cfg,
-                          SweepSpec(rates=(rate,), faults=(faults,)))[0]
+                          SweepSpec(rates=(rate,), scenarios=(attack,)))[0]
         out[proto] = {"tput": r["throughput"], "med_ms": r["median_ms"]}
         rows.append(_row(f"fig8/{proto}", r["median_ms"],
                          tput=round(r["throughput"])))
@@ -147,7 +145,7 @@ def robustness(sim_seconds: float = 4.0) -> List[Row]:
     names = list(lib)
     fin = lambda x: float(x) if np.isfinite(x) else None  # noqa: E731
     for proto, rates in sweeps.items():
-        spec = SweepSpec(rates=rates, faults=tuple(lib.values()))
+        spec = SweepSpec(rates=rates, scenarios=tuple(lib.values()))
         matrix[proto] = {s: {} for s in names}
         for r, (rate, _, fi, _) in zip(run_sweep(proto, cfg, spec),
                                        spec.points()):
@@ -189,7 +187,7 @@ def workload_matrix(sim_seconds: float = 4.0) -> List[Row]:
         scen_names = ("baseline",) if proto in ("epaxos", "rabia") \
             else ("baseline", "paper-ddos")
         scens = tuple(slib[s] for s in scen_names)
-        spec = SweepSpec(rates=(rate,), faults=scens,
+        spec = SweepSpec(rates=(rate,), scenarios=scens,
                          workloads=tuple(wlib.values()))
         matrix[proto] = {w: {} for w in wl_names}
         for r, (_, _, fi, wi) in zip(run_sweep(proto, cfg, spec),

@@ -6,10 +6,17 @@ Figure suites dispatch through the batched experiment engine
 (repro.core.experiment): each protocol's whole rate grid compiles once and
 runs as a single vmapped program; the per-suite stderr line reports
 wall-clock and the cumulative jit-trace count.
+
+Every run also writes ``BENCH_core.json`` at the repo root — per-suite
+wall-clock with the compile-vs-run split and the resolved channel-ring
+horizon (experiment.timing_stats) — so the perf trajectory is tracked
+across PRs; the ``channel`` suite's packed-vs-legacy comparison lands in
+``benchmarks/artifacts/channel_bench.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -19,7 +26,18 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from benchmarks import figures  # noqa: E402
 from benchmarks import roofline  # noqa: E402
 from benchmarks.bench_kernels import bench as kernel_bench  # noqa: E402
+from benchmarks.bench_kernels import bench_channel  # noqa: E402
 from repro.core import experiment  # noqa: E402
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _channel_suite() -> list:
+    rows = bench_channel()
+    art = {r[0]: {"us_per_tick": r[1], "derived": r[2]} for r in rows}
+    (figures.ART / "channel_bench.json").write_text(
+        json.dumps(art, indent=1))
+    return rows
 
 
 def main() -> None:
@@ -41,6 +59,7 @@ def main() -> None:
         "workload-matrix": lambda: figures.workload_matrix(sim_s),
         "paper": figures.paper_comparison,
         "kernels": kernel_bench,
+        "channel": _channel_suite,
         "roofline_single": lambda: roofline.rows("single"),
         "roofline_multi": lambda: roofline.rows("multi"),
     }
@@ -51,19 +70,56 @@ def main() -> None:
                      f"valid: {', '.join(suites)}")
     print("name,us_per_call,derived")
     errored = []
+    bench_core: dict = {"suites": {}}
     for name, fn in suites.items():
         if only and name not in only:
             continue
+        experiment.reset_timing_stats()
         t0 = time.time()
+        suite_error = None
         try:
             for row in fn():
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
             errored.append(name)
+            suite_error = type(e).__name__
+        wall = time.time() - t0
+        stats = experiment.timing_stats()
+        entry = {
+            # per-suite so merged files can't mix quick/full timings
+            # under one misleading top-level flag
+            "quick": args.quick,
+            "wall_s": round(wall, 2),
+            # first-dispatch (trace+compile+first run) vs cache-hit split
+            "compile_s": round(sum(s["compile_s"] for s in stats.values()),
+                               2),
+            "run_s": round(sum(s["run_s"] for s in stats.values()), 2),
+        }
+        if suite_error is not None:
+            # a partial run's wall-clock is not a trajectory point —
+            # mark it so cross-PR comparisons can filter it out
+            entry["error"] = suite_error
+        horizons = {p: s["horizon"] for p, s in stats.items()
+                    if s.get("horizon")}
+        if horizons:
+            entry["ring_horizon"] = horizons
+        bench_core["suites"][name] = entry
         traces = sum(experiment.trace_counts().values())
-        print(f"# {name} done in {time.time() - t0:.0f}s "
+        print(f"# {name} done in {wall:.0f}s "
               f"(sweep traces so far: {traces})", file=sys.stderr)
+    # merge into the tracked trajectory file: partial (--only) runs update
+    # just the suites they ran instead of discarding the rest
+    bench_path = REPO / "BENCH_core.json"
+    if bench_path.exists():
+        try:
+            prev = json.loads(bench_path.read_text())
+            merged = prev.get("suites", {})
+            merged.update(bench_core["suites"])
+            bench_core["suites"] = merged
+        except (json.JSONDecodeError, AttributeError):
+            pass
+    bench_path.write_text(json.dumps(bench_core, indent=1) + "\n")
     roofline.main()
     if errored:
         sys.exit(f"suite(s) errored: {', '.join(errored)}")

@@ -51,7 +51,7 @@ def paper_tour() -> None:
 
     print("\n== leader crash at t=1.5s (Fig. 7) ==")
     spec = SweepSpec(rates=(100_000,),
-                     faults=(Scenario("leader-crash",
+                     scenarios=(Scenario("leader-crash",
                                       (Crash(start_s=1.5, targets=(0,)),)),))
     for proto in ("mandator-sporades", "mandator-paxos"):
         r = run_sweep(proto, cfg, spec)[0]
@@ -70,7 +70,7 @@ def scenario_showcase(name: str, sim_s: float, rate: float) -> None:
     for s, e, kind in windows:
         end = f"{min(e, sim_s):.2f}s" if e != float("inf") else "end"
         print(f"  {kind:17s} {s:.2f}s -> {end}")
-    spec = SweepSpec(rates=(rate,), faults=(scen,))
+    spec = SweepSpec(rates=(rate,), scenarios=(scen,))
     for proto in ("mandator-sporades", "mandator-paxos", "multipaxos"):
         r = run_sweep(proto, cfg, spec)[0]
         print(f"\n {proto}: {r['throughput']:,.0f} tx/s overall, "
@@ -99,7 +99,7 @@ def workload_showcase(wname: str, sname: str, sim_s: float,
           + (f" under scenario {sname!r}" if sname else "")
           + f" ({sim_s:.0f}s sim, {rate:,.0f} tx/s "
           + ("client-pool target" if closed else "offered") + ") ==")
-    spec = SweepSpec(rates=(rate,), faults=(scen,), workloads=(wl,))
+    spec = SweepSpec(rates=(rate,), scenarios=(scen,), workloads=(wl,))
     for proto in ("mandator-sporades", "mandator-paxos"):
         r = run_sweep(proto, cfg, spec)[0]
         print(f"\n {proto}: {r['throughput']:,.0f} tx/s overall, "

@@ -6,7 +6,7 @@ WAN simulator (core/netsim.py) and the figure benchmarks.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
+from typing import Tuple, Union
 
 import numpy as np
 
@@ -67,10 +67,16 @@ class SMRConfig:
     tick_ms: float = 1.0
     # Delayed-delivery horizon (ring-buffer slots) of the simulated channels:
     # a message's total delay (link + DDoS + NIC backlog) is capped at
-    # horizon-1 ticks. 2048 covers the worst §5.5 attack (800ms + 163ms max
-    # link, 1ms ticks) with ~1s of queueing headroom; per-tick channel cost
-    # is linear in the horizon, so don't oversize it.
-    delay_horizon_ticks: int = 2048
+    # horizon-1 ticks. Per-tick channel cost is linear in the horizon, so
+    # the default "auto" sizes it exactly per sweep: static link delay +
+    # the scenario's max extra delay + a NIC-backlog bound, next power of
+    # two (netsim.resolve_horizon). Pass an int to pin it (2048 was the
+    # seed-era fixed size: worst §5.5 attack + ~1s queueing headroom).
+    delay_horizon_ticks: Union[int, str] = "auto"
+    # Packed-channel-ring commit backend (repro.kernels.channel_ring):
+    # "auto" = Pallas kernel on TPU, pure-jnp oracle elsewhere; also
+    # "jnp"/"ref", "pallas", "pallas-interpret" (parity testing).
+    channel_backend: str = "auto"
 
     def delays_ms(self) -> np.ndarray:
         return one_way_delay_ms(self.n_replicas)

@@ -31,7 +31,7 @@ from repro.workloads.analytic import (
 )
 
 
-def run_epaxos_model(cfg: SMRConfig, rate_tx_s: float, faults=None,
+def run_epaxos_model(cfg: SMRConfig, rate_tx_s: float, scenario=None,
                      workload=None) -> Dict:
     """``workload``: a repro.workloads.Workload (or None). Open-loop shapes
     modulate the per-origin mean rate over time through the same compiled

@@ -2,18 +2,22 @@
 sweep grid as ONE compiled JAX program per protocol.
 
 The paper's headline results (Figs. 6–9) are sweeps over arrival rate,
-protocol, and fault scenario — and, beyond the paper, over *traffic shape*
-(``repro.workloads``). Instead of re-tracing the tick-level
+protocol, and network scenario — and, beyond the paper, over *traffic
+shape* (``repro.workloads``). Instead of re-tracing the tick-level
 ``jax.lax.scan`` for every grid point, ``run_sweep`` lowers a ``SweepSpec``
 to a single ``jax.vmap``-over-scan dispatch:
 
-  1. every scenario (or legacy ``FaultSchedule``) variant becomes an
-     array-native env (``netsim.build_env`` with a common window-table
-     pad), stacked leaf-wise — and every workload variant becomes a
-     windowed rate table (``workloads.lower``, same pad-and-stack trick);
-  2. the cartesian grid is flattened to B points, each an
+  1. the channel delay horizon is resolved ONCE for the whole sweep
+     (``netsim.resolve_horizon`` over every scenario in the grid) so all
+     points share one ring shape — the packed channel rings are then
+     exactly as large as the sweep's true delay bound;
+  2. every scenario variant becomes an array-native env
+     (``netsim.build_env`` with a common window-table pad), stacked
+     leaf-wise — and every workload variant becomes a windowed rate table
+     (``workloads.lower``, same pad-and-stack trick);
+  3. the cartesian grid is flattened to B points, each an
      (env, workload-table, rate, seed) tuple gathered from the stacks;
-  3. ``harness.sim_point`` — scan *plus* on-device metric extraction — is
+  4. ``harness.sim_point`` — scan *plus* on-device metric extraction — is
      vmapped over the B axis and jitted once per
      (protocol, cfg, workload-mode, B) shape.
 
@@ -22,13 +26,16 @@ on the host behind the same API (time-varying rates come from the same
 compiled tables via ``workloads.analytic``) so callers can sweep any
 protocol.
 
-``trace_counts()`` exposes how many times each protocol's program was traced
-— the equivalence tests (tests/test_experiment.py, tests/test_workloads.py)
-pin a whole grid to one trace.
+``trace_counts()`` exposes how many times each protocol's program was
+traced — the equivalence tests (tests/test_experiment.py,
+tests/test_workloads.py) pin a whole grid to one trace — and
+``timing_stats()`` the compile-vs-run wall-clock split plus the resolved
+ring horizon, which benchmarks/run.py persists to BENCH_core.json.
 """
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, Iterator, List, Tuple
@@ -44,6 +51,7 @@ from repro.core import harness, netsim
 ANALYTIC_PROTOCOLS = ("epaxos", "rabia")
 
 _TRACE_COUNTS: Dict[str, int] = {}
+_TIMING: Dict[str, Dict[str, float]] = {}
 
 
 def trace_counts() -> Dict[str, int]:
@@ -55,30 +63,41 @@ def reset_trace_counts() -> None:
     _TRACE_COUNTS.clear()
 
 
+def timing_stats() -> Dict[str, Dict[str, float]]:
+    """Per-protocol wall-clock of the sweep dispatches since the last
+    reset: ``compile_s`` (calls that traced — compile + first run),
+    ``run_s`` (cache-hit calls), ``dispatches``, and ``horizon`` (the
+    resolved ring size of the latest sweep)."""
+    return {k: dict(v) for k, v in _TIMING.items()}
+
+
+def reset_timing_stats() -> None:
+    _TIMING.clear()
+
+
 @dataclass(frozen=True)
 class SweepSpec:
     """A sweep grid: cartesian product of rates (tx/s), PRNG seeds,
-    network-adversity variants, and traffic-shape variants. Each entry of
-    ``faults`` is a ``repro.scenarios.Scenario`` or a legacy
-    ``FaultSchedule`` (compiled to one); each entry of ``workloads`` is a
-    ``repro.workloads.Workload`` (None = the §5.2 open-loop Poisson
-    baseline). ``points()`` yields the flattened grid in rate-major order
-    as (rate, seed, fault_index, workload_index) — the same order
-    ``run_sweep`` returns results in."""
+    network-scenario variants, and traffic-shape variants. Each entry of
+    ``scenarios`` is a ``repro.scenarios.Scenario`` (None = fault-free
+    baseline); each entry of ``workloads`` is a ``repro.workloads.Workload``
+    (None = the §5.2 open-loop Poisson baseline). ``points()`` yields the
+    flattened grid in rate-major order as (rate, seed, scenario_index,
+    workload_index) — the same order ``run_sweep`` returns results in."""
     rates: Tuple[float, ...]
     seeds: Tuple[int, ...] = (0,)
-    faults: Tuple = (None,)
+    scenarios: Tuple = (None,)
     workloads: Tuple = (None,)
 
     def points(self) -> Iterator[Tuple[float, int, int, int]]:
         for rate, seed, fi, wi in itertools.product(
-                self.rates, self.seeds, range(len(self.faults)),
+                self.rates, self.seeds, range(len(self.scenarios)),
                 range(len(self.workloads))):
             yield float(rate), int(seed), fi, wi
 
     @property
     def size(self) -> int:
-        return (len(self.rates) * len(self.seeds) * len(self.faults)
+        return (len(self.rates) * len(self.seeds) * len(self.scenarios)
                 * len(self.workloads))
 
 
@@ -95,11 +114,22 @@ def _sweep_compiled(protocol: str, cfg: SMRConfig, mode: wlc.WorkloadMode,
 
 def _lower(cfg: SMRConfig, spec: SweepSpec):
     """Flatten the grid to stacked per-point inputs (env leaves, workload
-    table leaves, rate, seed) plus the static workload mode."""
+    table leaves, rate, seed) plus the static workload mode and the
+    horizon-resolved cfg (one ring shape for the whole grid)."""
+    from repro import scenarios as sc
     pts = list(spec.points())
-    n_windows = max(netsim.env_windows(cfg, f) for f in spec.faults)
+    # lower every scenario ONCE: the tables feed both the sweep-wide
+    # horizon resolution and the padded env stack. build_env gets the
+    # ORIGINAL cfg (envs don't embed the horizon), so its static-delay
+    # validation sees the user's auto-vs-pinned intent exactly as a
+    # direct build_env call would; only the compiled program takes the
+    # sweep-wide resolved horizon.
+    stabs = [sc.lower(cfg, sc.as_scenario(f)) for f in spec.scenarios]
+    n_windows = max(t["alive"].shape[0] for t in stabs)
     stack = netsim.stack_envs(
-        [netsim.build_env(cfg, f, n_windows) for f in spec.faults])
+        [netsim.build_env(cfg, f, n_windows, tab=t)
+         for f, t in zip(spec.scenarios, stabs)])
+    cfg = netsim.resolve_horizon(cfg, tabs=stabs)
     fidx = np.array([fi for _, _, fi, _ in pts], np.int32)
     env_b = jax.tree.map(lambda x: x[fidx], stack)
     wl_pad = max(wlc.compile.n_windows(cfg, w) for w in spec.workloads)
@@ -117,7 +147,7 @@ def _lower(cfg: SMRConfig, spec: SweepSpec):
         np.array([r for r, _, _, _ in pts], np.float64)
         * cfg.tick_ms / 1000.0 / cfg.n_replicas, jnp.float32)
     seed_b = jnp.asarray([s for _, s, _, _ in pts], jnp.int32)
-    return pts, mode, env_b, wl_b, rate_b, seed_b
+    return pts, cfg, mode, env_b, wl_b, rate_b, seed_b
 
 
 def run_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec) -> List[Dict]:
@@ -132,7 +162,7 @@ def run_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec) -> List[Dict]:
             from repro.core.rabia import run_rabia_model as model
         out = []
         for rate, seed, fi, wi in spec.points():
-            r = model(cfg, rate, spec.faults[fi],
+            r = model(cfg, rate, spec.scenarios[fi],
                       workload=spec.workloads[wi])
             r["seed"] = seed
             r["workload"] = wl_names[wi]
@@ -141,9 +171,19 @@ def run_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec) -> List[Dict]:
     if protocol not in harness.SCAN_PROTOCOLS:
         raise ValueError(protocol)
 
-    pts, mode, env_b, wl_b, rate_b, seed_b = _lower(cfg, spec)
+    pts, cfg, mode, env_b, wl_b, rate_b, seed_b = _lower(cfg, spec)
+    traces_before = _TRACE_COUNTS.get(protocol, 0)
+    t0 = time.perf_counter()
     out = jax.tree.map(np.asarray, _sweep_compiled(
         protocol, cfg, mode, env_b, wl_b, rate_b, seed_b))
+    dt = time.perf_counter() - t0
+    stats = _TIMING.setdefault(protocol, {
+        "compile_s": 0.0, "run_s": 0.0, "dispatches": 0, "horizon": 0})
+    bucket = ("compile_s" if _TRACE_COUNTS.get(protocol, 0) > traces_before
+              else "run_s")
+    stats[bucket] += dt
+    stats["dispatches"] += 1
+    stats["horizon"] = int(cfg.delay_horizon_ticks)
     results: List[Dict] = []
     for i, (rate, seed, fi, wi) in enumerate(pts):
         r: Dict = {"protocol": protocol, "rate": rate, "seed": seed,

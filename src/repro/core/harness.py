@@ -237,11 +237,11 @@ def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
 
 
 def run_sim(protocol: str, cfg: SMRConfig, rate_tx_s: float,
-            faults=None, seed: int = 0, workload=None) -> Dict:
+            scenario=None, seed: int = 0, workload=None) -> Dict:
     """Single-point wrapper over the batched engine (experiment.run_sweep).
-    faults: a repro.scenarios.Scenario or legacy FaultSchedule (or None).
+    scenario: a repro.scenarios.Scenario (or None for fault-free).
     workload: a repro.workloads.Workload (or None for the §5.2 baseline)."""
     from repro.core.experiment import SweepSpec, run_sweep
     spec = SweepSpec(rates=(float(rate_tx_s),), seeds=(int(seed),),
-                     faults=(faults,), workloads=(workload,))
+                     scenarios=(scenario,), workloads=(workload,))
     return run_sweep(protocol, cfg, spec)[0]

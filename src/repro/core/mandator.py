@@ -25,6 +25,14 @@ from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim, workload
 
+def ring_spec() -> ch.RingSpec:
+    """Packed delivery ring: both message types in one fused buffer."""
+    return ch.RingSpec(
+        ch.ChannelSpec("batch", 2),    # (round, lastCompleted)
+        ch.ChannelSpec("vote", 1),
+    )
+
+
 def init_state(cfg: SMRConfig, n_ticks: int, closed: bool = False) -> Dict:
     n = cfg.n_replicas
     dmax = cfg.delay_horizon_ticks
@@ -35,8 +43,7 @@ def init_state(cfg: SMRConfig, n_ticks: int, closed: bool = False) -> Dict:
         "lcr": jnp.zeros((n, n), jnp.int32),           # i's lastCompletedRounds
         "seen_round": jnp.zeros((n, n), jnp.int32),    # i's max batch seen from j
         "vote_max": jnp.zeros((n, n), jnp.int32),      # votes i received from j
-        "batch_ch": ch.make_channel(dmax, n, 2),   # (round, lastCompleted)
-        "vote_ch": ch.make_channel(dmax, n, 1),
+        "ring": ch.make_ring(ring_spec(), dmax, n),
         "egress_busy": jnp.zeros((n,), jnp.float32),
     }
 
@@ -51,13 +58,19 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     delays = netsim.link_delay(env, t)
     drop = netsim.link_drop(env, t)
     st = dict(st)
+    # one fused pop of slot t for every channel; sends buffer up and commit
+    # as one fused scatter at the end of the tick (same-tick sends always
+    # land at t+1 or later, so the reorder is exact — channel.py)
+    spec = ring_spec()
+    msgs = ch.ring_deliver(spec, st["ring"], t)
+    sends = []
 
     # 1) client arrivals + cpu refill
     wl = workload.arrive(st["wl"], key, t, rate_per_tick, alive, wlt, mode)
     wl = workload.refill_cpu(wl, env["cpu_req_per_tick"])
 
     # 2) deliver <new-Mandator-batch>: update seen rounds + lcr, send votes
-    batch_ch, bflags, bpayload = ch.deliver(st["batch_ch"], t)
+    bflags, bpayload = msgs["batch"]
     folded = ch.fold_state(
         jnp.stack([st["seen_round"], st["lcr"]], axis=-1).astype(jnp.float32),
         bflags, bpayload)
@@ -67,12 +80,12 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     # vote for every newly seen batch (line 16): cumulative vote = max round
     vote_mask = jnp.swapaxes(bflags, 0, 1) & alive[:, None]   # [voter, owner]
     vote_payload = seen.astype(jnp.float32)[..., None]        # [n, n, 1]
-    vote_ch = ch.send(st["vote_ch"], t, vote_payload,
-                      delays.astype(jnp.int32), vote_mask, drop=drop)
+    sends.append(ch.Send("vote", vote_payload, delays.astype(jnp.int32),
+                         vote_mask))
 
     # 3) deliver votes; in-order completion check (lines 17-19); with lanes,
     #    several rounds may complete back-to-back in one tick
-    vote_ch, vflags, vpayload = ch.deliver(vote_ch, t)
+    vflags, vpayload = msgs["vote"]
     vote_max = ch.fold_state(st["vote_max"].astype(jnp.float32)[..., None],
                              vflags, vpayload)[..., 0].astype(jnp.int32)
     own_round = st["own_round"]
@@ -101,13 +114,14 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
                    ).astype(jnp.int32)
     bpay = jnp.stack([formed_round, own_round], axis=-1).astype(
         jnp.float32)[:, None, :] * jnp.ones((n, n, 1))
-    batch_ch = ch.send(batch_ch, t, bpay, total_delay,
-                       formed[:, None] & jnp.ones((n, n), jnp.bool_),
-                       drop=drop)
+    sends.append(ch.Send("batch", bpay, total_delay,
+                         formed[:, None] & jnp.ones((n, n), jnp.bool_)))
 
+    ring = ch.ring_commit(spec, st["ring"], t, sends, drop=drop,
+                          backend=cfg.channel_backend)
     st.update(wl=wl, own_round=own_round, formed_round=formed_round, lcr=lcr,
-              seen_round=seen, vote_max=vote_max, batch_ch=batch_ch,
-              vote_ch=vote_ch, egress_busy=busy)
+              seen_round=seen, vote_max=vote_max, ring=ring,
+              egress_busy=busy)
     return st
 
 

@@ -17,14 +17,17 @@ into W windows over which everything is constant, and the env carries
 a common width before stacking; padding rows are never read because
 ``win_of_tick`` only indexes real windows.
 
-``FaultSchedule`` is the seed-era fault model, kept as a thin compatibility
-shim: it compiles to an equivalent Scenario (scenarios/compile.py), with
-bitwise-identical tables pinned by tests/test_scenarios.py.
+The channel rings that carry the traffic are sized by the **delay
+horizon**; ``resolve_horizon`` computes the exact per-sweep bound from the
+compiled scenario tables when ``SMRConfig.delay_horizon_ticks="auto"``
+(static link delay + max scenario extra delay + a NIC-backlog bound, next
+power of two) — per-tick channel cost is linear in the ring size, so this
+is what keeps the fig-suite rings at their true size instead of a fixed
+worst-case 2048.
 """
 from __future__ import annotations
 
-import warnings
-from dataclasses import dataclass
+import dataclasses
 from typing import Dict, Optional, Sequence
 
 import jax
@@ -34,58 +37,102 @@ import numpy as np
 from repro.configs.smr import SMRConfig
 
 
-@dataclass(frozen=True)
-class FaultSchedule:
-    """DEPRECATED shim over repro.scenarios (kept so seed-era callers keep
-    their exact semantics; the fig 6-9 benchmarks now pass Scenarios).
-
-    crash_time_s[i] — replica i stops at that time (inf = never).
-    ddos: if enabled, every ``repick_s`` seconds a random minority set is
-    attacked; their links gain ``attack_delay_ms`` each way."""
-    crash_time_s: Optional[np.ndarray] = None
-    ddos: bool = False
-    ddos_attack_delay_ms: float = 800.0
-    ddos_repick_s: float = 2.0
-    ddos_seed: int = 7
-
-    def __post_init__(self):
-        warnings.warn(
-            "netsim.FaultSchedule is deprecated; pass a "
-            "repro.scenarios.Scenario (see scenarios.from_fault_schedule "
-            "for the exact-equivalent compilation)",
-            # 3, not 2: __post_init__ is called by the generated __init__,
-            # so 2 would attribute the warning to dataclass-generated code
-            DeprecationWarning, stacklevel=3)
-
-
 def sim_ticks(cfg: SMRConfig) -> int:
     """Number of simulator ticks — static (known at trace time)."""
     return int(cfg.sim_seconds * 1000 / cfg.tick_ms)
 
 
-def env_windows(cfg: SMRConfig, faults) -> int:
-    """Windowed-table rows this scenario (or FaultSchedule) lowers to —
-    used to pick a common pad width before stacking envs."""
+def env_windows(cfg: SMRConfig, scenario) -> int:
+    """Windowed-table rows this scenario lowers to — used to pick a common
+    pad width before stacking envs."""
     from repro import scenarios
-    return scenarios.compile.n_windows(cfg, scenarios.as_scenario(faults))
+    return scenarios.compile.n_windows(cfg, scenarios.as_scenario(scenario))
 
 
-def build_env(cfg: SMRConfig, faults=None,
-              n_windows: Optional[int] = None) -> Dict[str, jnp.ndarray]:
-    """faults: a repro.scenarios.Scenario, a FaultSchedule (compat shim),
-    or None (fault-free baseline)."""
+# extra slots past the provable static bound: absorbs rounding and the
+# sub-tick serialization remainders without changing the power-of-two size
+# in practice
+_HORIZON_MARGIN_TICKS = 16
+
+
+def _backlog_bound_ticks(cfg: SMRConfig, min_nic_scale: float) -> float:
+    """Upper bound on NIC egress queueing delay (ticks). Batch formation is
+    completion-gated in every protocol (one outstanding slot for paxos,
+    ``mandator_lanes`` chained batches for mandator), so at most that many
+    maximal batches can queue on one sender's NIC at once; each serializes
+    to all n receivers at the (throttle-scaled) egress rate. A fully cut
+    NIC (scale <= 0) has no finite bound — the caller caps the horizon at
+    the sim length, past which delivery times are unobservable anyway."""
+    if min_nic_scale <= 0.0:
+        return np.inf
+    bytes_per_tick = cfg.nic_gbps * 1e9 / 8.0 * cfg.tick_ms / 1000.0
+    max_batch_bytes = (max(cfg.batch_paxos, cfg.batch_mandator,
+                           cfg.batch_sporades) * cfg.request_bytes + 100.0)
+    outstanding = max(1, cfg.mandator_lanes)
+    return outstanding * cfg.n_replicas * max_batch_bytes / (
+        bytes_per_tick * float(min_nic_scale))
+
+
+def resolve_horizon(cfg: SMRConfig, scenarios_=(), tabs=None) -> SMRConfig:
+    """Resolve ``delay_horizon_ticks="auto"`` to the exact bound for a
+    sweep: max static link delay + the largest scenario ``extra_delay`` +
+    the NIC-backlog bound under the worst scenario throttle, next power of
+    two. The bound is capped at one sim length: a ring spanning the whole
+    run clips only deliveries that would land after the sim ends — which
+    no horizon could observe — so the cap keeps the sound-bound contract
+    even when a harsh ``BandwidthThrottle`` makes the raw backlog bound
+    huge. Must be called with EVERY scenario of a sweep so all grid points
+    share one ring shape (one compiled program); pass ``tabs`` (their
+    pre-lowered, unpadded tables) to avoid re-lowering. No-op on int
+    horizons."""
+    if isinstance(cfg.delay_horizon_ticks, int):
+        return cfg
+    if cfg.delay_horizon_ticks != "auto":
+        raise ValueError(
+            f"delay_horizon_ticks must be an int or 'auto', got "
+            f"{cfg.delay_horizon_ticks!r}")
+    if tabs is None:
+        from repro import scenarios as sc
+        tabs = [sc.lower(cfg, sc.as_scenario(s)) for s in scenarios_]
+    extra = 0.0
+    min_scale = 1.0
+    for tab in tabs:
+        extra = max(extra, float(np.max(tab["extra_delay"], initial=0.0)))
+        min_scale = min(min_scale, float(np.min(tab["nic_scale"],
+                                                initial=1.0)))
+    bound = (np.max(cfg.delays_ms()) / cfg.tick_ms + extra
+             + _backlog_bound_ticks(cfg, min_scale) + _HORIZON_MARGIN_TICKS)
+    bound = min(float(bound), float(sim_ticks(cfg) + 1))
+    horizon = max(64, 1 << max(0, int(np.ceil(bound)) - 1).bit_length())
+    return dataclasses.replace(cfg, delay_horizon_ticks=int(horizon))
+
+
+def build_env(cfg: SMRConfig, scenario=None,
+              n_windows: Optional[int] = None,
+              tab=None) -> Dict[str, jnp.ndarray]:
+    """scenario: a repro.scenarios.Scenario or None (fault-free baseline).
+    tab: its pre-lowered (unpadded) tables, if the caller already has them
+    (experiment._lower computes them once per sweep for the horizon)."""
     from repro import scenarios
     n = cfg.n_replicas
-    tab = scenarios.lower(cfg, scenarios.as_scenario(faults),
-                          pad_windows=n_windows)
+    if tab is None:
+        tab = scenarios.lower(cfg, scenarios.as_scenario(scenario))
+    pinned = isinstance(cfg.delay_horizon_ticks, int)
+    cfg = resolve_horizon(cfg, tabs=[tab])
+    if n_windows is not None:
+        tab = scenarios.compile.pad_tables(tab, n_windows)
     # Channels cap a message's total delay at delay_horizon_ticks - 1
     # (channel.send clips); NIC backlog beyond the horizon is delivered at
-    # the horizon by design, but the *static* link + scenario delay
-    # exceeding it is a misconfiguration that would silently distort every
-    # message.
+    # the horizon by design, but a *static* link + scenario delay exceeding
+    # a PINNED horizon is a misconfiguration that would silently distort
+    # every message. An "auto" horizon only ever falls short of the static
+    # delay when capped at the sim length — and a ring spanning the run
+    # clips deliveries to at/after the last tick, where nothing is
+    # observable, so that case is sound and passes.
     static_delay = (np.max(cfg.delays_ms()) / cfg.tick_ms
                     + float(np.max(tab["extra_delay"], initial=0.0)))
-    if static_delay >= cfg.delay_horizon_ticks:
+    if static_delay >= cfg.delay_horizon_ticks and (
+            pinned or cfg.delay_horizon_ticks - 1 < sim_ticks(cfg)):
         raise ValueError(
             f"link + scenario delay ({static_delay:.0f} ticks) exceeds "
             f"delay_horizon_ticks={cfg.delay_horizon_ticks}; raise the "

@@ -36,6 +36,19 @@ def _phase1_ticks(cfg: SMRConfig) -> jnp.ndarray:
     return jnp.asarray(rtts, jnp.float32)
 
 
+def ring_spec(n: int, mandator_mode: bool) -> ch.RingSpec:
+    """Packed delivery ring. The additive request-forward channel only
+    exists in plain mode (mandator mode orders vector clocks, clients
+    never forward), so its fields drop out of the ring entirely there."""
+    channels = () if mandator_mode else (
+        ch.ChannelSpec("fw", 2, additive=True),)      # (count, tsum)
+    return ch.RingSpec(
+        *channels,
+        ch.ChannelSpec("acc", 3 + n),                 # (view, slot, ., vc)
+        ch.ChannelSpec("ack", 1),
+    )
+
+
 def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool,
                closed: bool = False) -> Dict:
     n = cfg.n_replicas
@@ -52,9 +65,7 @@ def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool,
         "committed_slot": jnp.zeros((n,), jnp.int32),
         "cvc": jnp.zeros((n, n), jnp.int32),          # mandator mode commit VC
         "slot_vc": jnp.zeros((n, 1 + n), jnp.float32),  # outstanding slot payload
-        "fw_ch": ch.make_channel(dmax, n, 2, additive=True),  # (count, tsum)
-        "acc_ch": ch.make_channel(dmax, n, 3 + n),    # (view, slot, ., vc)
-        "ack_ch": ch.make_channel(dmax, n, 1),
+        "ring": ch.make_ring(ring_spec(n, mandator_mode), dmax, n),
         "egress_busy": jnp.zeros((n,), jnp.float32),
         "phase1": _phase1_ticks(cfg),
     }
@@ -77,11 +88,16 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     view = st["view"]
     leader = view % n
     i_am_leader = (leader == rows) & alive
+    # one fused pop of slot t for every channel; sends buffer up and commit
+    # as one fused scatter at the end of the tick (same-tick sends always
+    # land at t+1 or later, so the reorder is exact — channel.py)
+    spec = ring_spec(n, mandator_mode)
+    msgs = ch.ring_deliver(spec, st["ring"], t)
+    sends = []
 
     wl = workload.refill_cpu(st["wl"], env["cpu_req_per_tick"])
 
     # ---- request forwarding (plain mode) ----------------------------------
-    fw_ch = st["fw_ch"]
     if not mandator_mode:
         wl = workload.arrive(wl, key, t, rate_per_tick, alive, wlt, mode)
         # forward whole local buffer to my current leader
@@ -91,8 +107,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
         # the leader keeps local arrivals in its own pool (no self-forward)
         fw_mask = (jnp.arange(n)[None, :] == leader[:, None]) & alive[:, None] \
             & (cnt > 0)[:, None] & (rows != leader)[:, None]
-        fw_ch = ch.send(fw_ch, t, fw_pay, delays, fw_mask, additive=True,
-                        drop=drop)
+        sends.append(ch.Send("fw", fw_pay, delays, fw_mask))
         wl = dict(wl)
         # the forward channel is additive (counters), so a scenario-dropped
         # link is NOT a tolerable omission: keep the batch buffered and
@@ -101,13 +116,13 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
         wl["buffer"] = jnp.where(sent, 0.0, wl["buffer"])
         wl["buffer_tsum"] = jnp.where(sent, 0.0, wl["buffer_tsum"])
         # leader pools forwarded requests
-        fw_ch, ffl, fpay = ch.deliver(fw_ch, t)
+        ffl, fpay = msgs["fw"]
         pool_cnt = jnp.sum(jnp.where(ffl[..., None], fpay, 0.0), axis=0)  # [rcv,2]
         wl["buffer"] = wl["buffer"] + pool_cnt[:, 0]
         wl["buffer_tsum"] = wl["buffer_tsum"] + pool_cnt[:, 1]
 
     # ---- deliver acks; leader commit ---------------------------------------
-    ack_ch, afl, apay = ch.deliver(st["ack_ch"], t)
+    afl, apay = msgs["ack"]
     acks = ch.fold_state(st["acks"].astype(jnp.float32)[..., None], afl, apay
                          )[..., 0].astype(jnp.int32)
     ack_cnt = jnp.sum(acks >= st["slot"][:, None], axis=1)
@@ -154,11 +169,11 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
         jnp.zeros((n, 1)),
         slot_vc[:, 1:] if mandator_mode else jnp.zeros((n, n))], axis=1
         )[:, None, :] * jnp.ones((n, n, 1))
-    acc_ch = ch.send(st["acc_ch"], t, acc_pay, total_delay,
-                     formed[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
+    sends.append(ch.Send("acc", acc_pay, total_delay,
+                         formed[:, None] & jnp.ones((n, n), jnp.bool_)))
 
     # ---- follower: deliver accepts, ack, heartbeat --------------------------
-    acc_ch, cfl, cpay = ch.deliver(acc_ch, t)
+    cfl, cpay = msgs["acc"]
     arr = jnp.swapaxes(cpay, 0, 1)
     afl2 = jnp.swapaxes(cfl, 0, 1)
     got = afl2.any(axis=1)
@@ -171,7 +186,7 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     # ack to the slot's leader
     ack_mask = fresh[:, None] & (jnp.arange(n)[None, :] == (view % n)[:, None])
     ack_pay = acc_slot.astype(jnp.float32)[:, None, None] * jnp.ones((n, n, 1))
-    ack_ch = ch.send(ack_ch, t, ack_pay, delays, ack_mask, drop=drop)
+    sends.append(ch.Send("ack", ack_pay, delays, ack_mask))
 
     # ---- view change ---------------------------------------------------------
     expired = alive & (tf - last_heard > to_ticks)
@@ -180,8 +195,10 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     became_leader = expired & ((view % n) == rows)
     ready_at = jnp.where(became_leader, tf + st["phase1"], st["ready_at"])
 
+    ring = ch.ring_commit(spec, st["ring"], t, sends, drop=drop,
+                          backend=cfg.channel_backend)
     st.update(wl=wl, view=view, last_heard=last_heard, ready_at=ready_at,
               slot=slot, outstanding=outstanding, acks=acks,
               committed_slot=committed_slot, cvc=cvc, slot_vc=slot_vc,
-              fw_ch=fw_ch, acc_ch=acc_ch, ack_ch=ack_ch, egress_busy=busy)
+              ring=ring, egress_busy=busy)
     return st

@@ -26,7 +26,7 @@ from repro.workloads.analytic import (
 )
 
 
-def run_rabia_model(cfg: SMRConfig, rate_tx_s: float, faults=None,
+def run_rabia_model(cfg: SMRConfig, rate_tx_s: float, scenario=None,
                     workload=None) -> Dict:
     """``workload``: a repro.workloads.Workload (or None). Open-loop shapes
     make the batch streams time-varying through the compiled rate table;

@@ -35,6 +35,19 @@ def key(v, r):
     return v * RS + r
 
 
+def ring_spec(n: int) -> ch.RingSpec:
+    """Packed delivery ring: all six Sporades message types in one fused
+    [Dmax, n, n, K] buffer (the seed carried six separate rings)."""
+    return ch.RingSpec(
+        ch.ChannelSpec("prop", 2 + 2 * n),
+        ch.ChannelSpec("vote", 2 + n),
+        ch.ChannelSpec("to", 2 + n),
+        ch.ChannelSpec("pa", 1 + n),
+        ch.ChannelSpec("va", n),
+        ch.ChannelSpec("ac", 2 + n),
+    )
+
+
 def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
     n = cfg.n_replicas
     dmax = cfg.delay_horizon_ticks
@@ -62,13 +75,8 @@ def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
         # Theorem-9 catch-up: adopt any h1 that gathered n-f votes)
         "va_st": jnp.full((n, n, n), -1.0, jnp.float32),
         "ac_st": jnp.full((n, n, 2 + n), -1.0, jnp.float32),
-        # channels
-        "prop_ch": ch.make_channel(dmax, n, 2 + 2 * n),
-        "vote_ch": ch.make_channel(dmax, n, 2 + n),
-        "to_ch": ch.make_channel(dmax, n, 2 + n),
-        "pa_ch": ch.make_channel(dmax, n, 1 + n),
-        "va_ch": ch.make_channel(dmax, n, n),
-        "ac_ch": ch.make_channel(dmax, n, 2 + n),
+        # all six message types share ONE packed delivery ring
+        "ring": ch.make_ring(ring_spec(n), dmax, n),
         "coins": coin_table(MAX_VIEWS, n),
     }
 
@@ -92,6 +100,12 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     tf = t.astype(jnp.float32)
     rows = jnp.arange(n)
     lcr_f = lcr.astype(jnp.float32)
+    # one fused pop of slot t for every channel; sends buffer up and commit
+    # as one fused scatter at the end of the tick (same-tick sends always
+    # land at t+1 or later, so the reorder is exact — channel.py)
+    spec = ring_spec(n)
+    msgs = ch.ring_deliver(spec, st["ring"], t)
+    sends = []
 
     v_cur, r_cur = st["v_cur"], st["r_cur"]
     is_async = st["is_async"]
@@ -100,7 +114,7 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     deadline = st["deadline"]
 
     # ---- 1) deliver <propose> (Alg2 lines 20-26) --------------------------
-    prop_ch, pfl, ppay = ch.deliver(st["prop_ch"], t)
+    pfl, ppay = msgs["prop"]
     arr = jnp.swapaxes(ppay, 0, 1)                       # [rcv, snd, P]
     afl = jnp.swapaxes(pfl, 0, 1)
     ps = jnp.max(jnp.where(afl[..., None], arr, -1.0), axis=1)   # [rcv, P]
@@ -123,11 +137,10 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
          bh_vc], axis=1)[:, None, :] * jnp.ones((n, n, 1))
     vote_mask = accept[:, None] & (jnp.arange(n)[None, :]
                                    == _leader_of(v_cur, n)[:, None])
-    vote_ch = ch.send(st["vote_ch"], t, vote_pay, delays, vote_mask,
-                      drop=drop)
+    sends.append(ch.Send("vote", vote_pay, delays, vote_mask))
 
     # ---- 2) deliver <vote>; leader trigger (Alg2 lines 9-19) --------------
-    vote_ch, vfl, vpay = ch.deliver(vote_ch, t)
+    vfl, vpay = msgs["vote"]
     vote_st = ch.fold_state(st["vote_st"], vfl, vpay)
     voted = vote_st[:, :, 0].astype(jnp.int32)           # [ldr, voter]
     kmax = jnp.max(voted, axis=1)
@@ -156,9 +169,8 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
         [new_key[:, None].astype(jnp.float32),
          commit_key[:, None].astype(jnp.float32), prop_vc, cvc],
         axis=1)[:, None, :] * jnp.ones((n, n, 1))
-    prop_ch = ch.send(prop_ch, t, prop_pay, delays,
-                      lead_trig[:, None] & jnp.ones((n, n), jnp.bool_),
-                      drop=drop)
+    sends.append(ch.Send("prop", prop_pay, delays,
+                         lead_trig[:, None] & jnp.ones((n, n), jnp.bool_)))
     prop_key = jnp.where(lead_trig, new_key, st["prop_key"])
     # (leader's own block_high advances via self-delivery of its propose)
     last_vote_trig = jnp.where(lead_trig, kmax, st["last_vote_trig"])
@@ -168,12 +180,12 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     to_pay = jnp.concatenate(
         [v_cur[:, None].astype(jnp.float32), bh_key[:, None].astype(jnp.float32),
          bh_vc], axis=1)[:, None, :] * jnp.ones((n, n, 1))
-    to_ch = ch.send(st["to_ch"], t, to_pay, delays,
-                    fire[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
+    sends.append(ch.Send("to", to_pay, delays,
+                         fire[:, None] & jnp.ones((n, n), jnp.bool_)))
     timeout_sent_v = jnp.where(fire, v_cur, st["timeout_sent_v"])
 
     # ---- 4) deliver <timeout>; async entry (Alg3 lines 1-7) ---------------
-    to_ch, tfl, tpay = ch.deliver(to_ch, t)
+    tfl, tpay = msgs["to"]
     to_st = ch.fold_state(st["to_st"], tfl, tpay)
     to_v = to_st[:, :, 0].astype(jnp.int32)
     tvmax = jnp.max(to_v, axis=1)
@@ -194,15 +206,15 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     pa_pay = jnp.concatenate(
         [pa_key1[:, None].astype(jnp.float32), avc], axis=1)[:, None, :] \
         * jnp.ones((n, n, 1))
-    pa_ch = ch.send(st["pa_ch"], t, pa_pay, delays,
-                    enter[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
+    sends.append(ch.Send("pa", pa_pay, delays,
+                         enter[:, None] & jnp.ones((n, n), jnp.bool_)))
     async_phase = jnp.where(enter, 1, st["async_phase"])
     my_r = jnp.where(enter, r1, st["my_r"])
     my_avc = jnp.where(enter[:, None], avc, st["my_avc"].astype(jnp.float32))
     deadline = jnp.where(enter, jnp.inf, deadline)
 
     # ---- 5) deliver <propose-async>; vote (Alg3 lines 8-14) ---------------
-    pa_ch, pafl, papay = ch.deliver(pa_ch, t)
+    pafl, papay = msgs["pa"]
     pa_st = ch.fold_state(st["pa_st"], pafl, papay)
     pa_arr = jnp.swapaxes(pafl, 0, 1)                    # [rcv, snd]
     pa_k = pa_st[:, :, 0].astype(jnp.int32)
@@ -215,12 +227,12 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     # broadcast vote: field p = key of p's block being voted (else -1)
     va_fields = jnp.where(va_vote, pa_k.astype(jnp.float32), -1.0)  # [i, p]
     va_pay = jnp.broadcast_to(va_fields[:, None, :], (n, n, n))
-    va_ch = ch.send(st["va_ch"], t, va_pay, delays,
-                    va_vote.any(axis=1)[:, None] & jnp.ones((n, n), jnp.bool_),
-                    drop=drop)
+    sends.append(ch.Send(
+        "va", va_pay, delays,
+        va_vote.any(axis=1)[:, None] & jnp.ones((n, n), jnp.bool_)))
 
     # ---- 6) deliver <vote-async>; heights (Alg3 lines 15-23) --------------
-    va_ch, vafl, vapay = ch.deliver(va_ch, t)
+    vafl, vapay = msgs["va"]
     va_st = ch.fold_state(st["va_st"], vafl, vapay)
     va_own = va_st[rows, :, rows].astype(jnp.int32)      # [rcv, voter]
     my_h1_key = (v_cur * 2 + 1) * RS + my_r
@@ -251,8 +263,8 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     pa_pay2 = jnp.concatenate(
         [pa_key2[:, None].astype(jnp.float32), avc2], axis=1)[:, None, :] \
         * jnp.ones((n, n, 1))
-    pa_ch = ch.send(pa_ch, t, pa_pay2, delays,
-                    go_h2[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
+    sends.append(ch.Send("pa", pa_pay2, delays,
+                         go_h2[:, None] & jnp.ones((n, n), jnp.bool_)))
     my_r = jnp.where(go_h2, r2, my_r)
     my_avc = jnp.where(go_h2[:, None], avc2, my_avc)
     async_phase = jnp.where(go_h2, 2, async_phase)
@@ -260,12 +272,12 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     ac_pay = jnp.concatenate(
         [v_cur[:, None].astype(jnp.float32), my_r[:, None].astype(jnp.float32),
          my_avc], axis=1)[:, None, :] * jnp.ones((n, n, 1))
-    ac_ch = ch.send(st["ac_ch"], t, ac_pay, delays,
-                    to_ac[:, None] & jnp.ones((n, n), jnp.bool_), drop=drop)
+    sends.append(ch.Send("ac", ac_pay, delays,
+                         to_ac[:, None] & jnp.ones((n, n), jnp.bool_)))
     async_phase = jnp.where(to_ac, 3, async_phase)
 
     # ---- 7) deliver <asynchronous-complete>; exit (Alg3 lines 24-36) ------
-    ac_ch, acfl, acpay = ch.deliver(ac_ch, t)
+    acfl, acpay = msgs["ac"]
     ac_st = ch.fold_state(st["ac_st"], acfl, acpay)
     ac_arr = jnp.swapaxes(acfl, 0, 1)
     ac_v = ac_st[:, :, 0].astype(jnp.int32)
@@ -312,9 +324,10 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
         * jnp.ones((n, n, 1))
     ex_vote_mask = exit_[:, None] & (jnp.arange(n)[None, :]
                                      == _leader_of(v_cur, n)[:, None])
-    vote_ch = ch.send(vote_ch, t, ex_vote_pay, delays, ex_vote_mask,
-                      drop=drop)
+    sends.append(ch.Send("vote", ex_vote_pay, delays, ex_vote_mask))
 
+    ring = ch.ring_commit(spec, st["ring"], t, sends, drop=drop,
+                          backend=cfg.channel_backend)
     st.update(
         v_cur=v_cur, r_cur=r_cur, is_async=is_async, bh_key=bh_key,
         bh_vc=bh_vc.astype(jnp.int32), commit_key=commit_key,
@@ -323,6 +336,5 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
         timeout_sent_v=timeout_sent_v, async_phase=async_phase, my_r=my_r,
         my_avc=my_avc.astype(jnp.int32), exited_view=exited_view,
         ac_tick=ac_tick, ac_v_seen=ac_v_seen, vote_st=vote_st, to_st=to_st,
-        pa_st=pa_st, va_st=va_st, ac_st=ac_st, prop_ch=prop_ch,
-        vote_ch=vote_ch, to_ch=to_ch, pa_ch=pa_ch, va_ch=va_ch, ac_ch=ac_ch)
+        pa_st=pa_st, va_st=va_st, ac_st=ac_st, ring=ring)
     return st

@@ -1,0 +1,84 @@
+"""Dispatch wrapper for the fused channel-ring commit.
+
+Called from ``core/channel.ring_commit`` inside the (already-jitted) tick
+scan, so there is no jit here — just backend selection and the reshaping
+each backend wants. The pure-jnp oracle (ref.py) is the CPU default and
+the correctness oracle; the Pallas kernel (kernel.py) is the TPU path and
+runs in interpret mode for parity tests.
+
+Backends: ``"jnp"`` (alias ``"ref"``), ``"pallas"``,
+``"pallas-interpret"``, ``"auto"`` (pallas on TPU, jnp elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.channel_ring.kernel import EntryLayout, ring_commit_tpu
+from repro.kernels.channel_ring.ref import ring_commit_ref
+
+BACKENDS = ("auto", "jnp", "ref", "pallas", "pallas-interpret")
+
+# per-tick send entry, already mask-merged: (slot [n,n] int32,
+# vals [n,n,w] float32 with merge-neutral at masked-out links,
+# flag [n,n] float32 1.0/0.0)
+Entry = Tuple[jax.Array, jax.Array, jax.Array]
+
+
+def resolve_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown channel backend {backend!r}; "
+                         f"one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return "jnp" if backend == "ref" else backend
+
+
+def _scatter_args(entries: Sequence[Entry], layout: Sequence[EntryLayout]):
+    """Concatenate the per-entry contributions along the field axis into
+    the oracle's flat (slots, field-index, values) triples — max group
+    (each max-merged send's contiguous payload+flag fields, plus every
+    additive send's flag) and add group (additive payloads)."""
+    sm, fm, vm = [], [], []
+    sa, fa, va = [], [], []
+    for (slot, vals, flag), (off, w, flag_off, additive) in zip(entries,
+                                                                layout):
+        if additive:
+            sa.append(jnp.broadcast_to(slot[..., None], vals.shape))
+            fa.append(np.arange(off, off + w))
+            va.append(vals)
+            sm.append(slot[..., None])
+            fm.append(np.array([flag_off]))
+            vm.append(flag[..., None])
+        else:
+            # payload + flag are contiguous: one [n, n, w+1] block
+            sm.append(jnp.broadcast_to(slot[..., None],
+                                       slot.shape + (w + 1,)))
+            fm.append(np.arange(off, off + w + 1))
+            vm.append(jnp.concatenate([vals, flag[..., None]], axis=-1))
+    cat = lambda xs: jnp.concatenate(xs, axis=-1)  # noqa: E731
+    out = (cat(sm), jnp.asarray(np.concatenate(fm), jnp.int32), cat(vm))
+    if sa:
+        return out + (cat(sa), jnp.asarray(np.concatenate(fa), jnp.int32),
+                      cat(va))
+    return out + (None, None, None)
+
+
+def ring_commit(buf: jax.Array, t: jax.Array, fill: jax.Array,
+                entries: Sequence[Entry], layout: Sequence[EntryLayout],
+                backend: str = "auto") -> jax.Array:
+    """Fused commit of one tick's sends: slot-clear of the delivered slot
+    ``t % D`` + one scatter-max + one scatter-add (see ref.py)."""
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return ring_commit_ref(buf, t, fill,
+                               *_scatter_args(entries, layout))
+    interpret = (backend == "pallas-interpret"
+                 or jax.default_backend() != "tpu")
+    return ring_commit_tpu(buf, t, fill,
+                           [e[0] for e in entries], [e[1] for e in entries],
+                           [e[2] for e in entries], layout,
+                           interpret=interpret)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the fused channel-ring commit.
+
+One simulator tick's worth of channel traffic against the packed ring
+``buf [D, n, n, K]`` (all of a protocol's channels concatenated along the
+field axis, each channel's flag field right after its payload — see
+core/channel.RingSpec):
+
+  1. slot-clear: slot ``t % D`` (the slot the tick just delivered) is reset
+     to the per-field fill vector;
+  2. ONE scatter-max over every max-merged payload field and every flag
+     field of the tick's sends;
+  3. ONE scatter-add over the additive payload fields (request counters).
+
+Sends can never land in slot ``t % D`` (delay is clipped to ``[1, D-1]``
+upstream), so the clear commutes with the scatters; duplicate scatter
+indices (two sends on the same channel colliding in one slot) merge by max
+exactly like sequential per-channel ``.at[].max`` calls did, and additive
+channels send once per tick so index order cannot perturb float addition.
+
+This is the CPU default and the parity oracle for the Pallas kernel
+(kernel.py); tests/test_kernels.py pins interpret-mode equivalence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_commit_ref(buf: jax.Array, t: jax.Array, fill: jax.Array,
+                    slots_max: jax.Array, fidx_max: jax.Array,
+                    vals_max: jax.Array,
+                    slots_add: jax.Array | None = None,
+                    fidx_add: jax.Array | None = None,
+                    vals_add: jax.Array | None = None) -> jax.Array:
+    """buf: [D, n, n, K]; fill: [K] per-field clear value.
+    slots_*: [n, n, F] target ring slot per scattered field;
+    fidx_*: [F] static field index into K; vals_*: [n, n, F] merged values
+    (masked-out entries already hold the merge-neutral fill)."""
+    d, n = buf.shape[0], buf.shape[1]
+    buf = buf.at[t % d].set(fill)                                # slot-clear
+    ii = jnp.arange(n)[:, None, None]
+    jj = jnp.arange(n)[None, :, None]
+    buf = buf.at[slots_max, ii, jj, fidx_max[None, None, :]].max(vals_max)
+    if fidx_add is not None:
+        buf = buf.at[slots_add, ii, jj, fidx_add[None, None, :]].add(vals_add)
+    return buf

@@ -7,9 +7,10 @@ windowed tables that ``netsim.build_env`` embeds into the array-native env,
 so any scenario stacks leaf-wise (``netsim.stack_envs``) and vmaps through
 the batched experiment engine unchanged.
 
-``netsim.FaultSchedule`` (the seed-era fault model) is kept as a thin
-compatibility shim: ``as_scenario`` compiles it to an equivalent Scenario
-(see ``compile.from_fault_schedule``) with bitwise-identical env tables.
+The seed-era ``netsim.FaultSchedule`` fault model is gone; its exact
+semantics live on as primitives (permanent ``Crash`` events, the seeded
+random-minority ``TargetedDelay``), pinned bitwise against the seed-era
+reference by tests/test_scenarios.py.
 """
 from repro.scenarios.primitives import (
     BandwidthThrottle,
@@ -21,10 +22,10 @@ from repro.scenarios.primitives import (
     Scenario,
     TargetedDelay,
 )
-from repro.scenarios.compile import as_scenario, from_fault_schedule, lower
+from repro.scenarios.compile import as_scenario, lower
 
 __all__ = [
     "BandwidthThrottle", "Crash", "GrayFailure", "Partition", "Recover",
     "RegionOutage", "Scenario", "TargetedDelay",
-    "as_scenario", "from_fault_schedule", "lower",
+    "as_scenario", "lower",
 ]

@@ -14,11 +14,11 @@ only indexes real windows) is what lets heterogeneous scenarios stack
 leaf-wise through ``netsim.stack_envs`` and vmap through
 ``experiment.run_sweep`` as one compiled program.
 
-``from_fault_schedule`` compiles the seed-era ``netsim.FaultSchedule`` to
-an equivalent Scenario: crash times become permanent ``Crash`` events and
-the §5.5 DDoS becomes a random-minority ``TargetedDelay`` with the same
-seeded draw stream, so the lowered tables reproduce the old per-tick
-alive/link_delay values bitwise (pinned by tests/test_scenarios.py).
+The seed-era ``netsim.FaultSchedule`` compiled to these same tables through
+a (since-removed) shim; its exact semantics survive as primitives —
+permanent ``Crash`` events and the random-minority ``TargetedDelay`` with
+the seeded draw stream — still pinned bitwise against the seed-era
+reference by tests/test_scenarios.py.
 """
 from __future__ import annotations
 
@@ -27,7 +27,7 @@ from typing import Optional
 import numpy as np
 
 from repro.configs.smr import SMRConfig
-from repro.scenarios.primitives import Crash, Scenario, Tables, TargetedDelay
+from repro.scenarios.primitives import Scenario, Tables
 
 
 def _sim_ticks(cfg: SMRConfig) -> int:
@@ -49,6 +49,22 @@ def _win_starts(cfg: SMRConfig, scenario: Scenario) -> np.ndarray:
     return np.array(sorted(e for e in edges if 0 <= e < n_ticks), np.int64)
 
 
+_WINDOW_KEYS = ("alive", "drop", "extra_delay", "nic_scale")
+
+
+def pad_tables(tab: Tables, pad_windows: int) -> Tables:
+    """Repeat-last-row pad the [W, ...] window tables to a common width
+    (padding rows are never read: ``win_of_tick`` only indexes real
+    windows). ``win_start``/``win_of_tick`` pass through untouched."""
+    w = tab["alive"].shape[0]
+    if pad_windows < w:
+        raise ValueError(f"pad_windows={pad_windows} < {w} real windows")
+    pad = pad_windows - w
+    return {k: (np.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1),
+                       mode="edge") if k in _WINDOW_KEYS else v)
+            for k, v in tab.items()}
+
+
 def lower(cfg: SMRConfig, scenario: Scenario,
           pad_windows: Optional[int] = None) -> Tables:
     n = cfg.n_replicas
@@ -63,42 +79,18 @@ def lower(cfg: SMRConfig, scenario: Scenario,
     }
     for ev in scenario.events:
         ev.paint(cfg, n_ticks, win_start, tab)
-    if pad_windows is not None:
-        if pad_windows < w:
-            raise ValueError(f"pad_windows={pad_windows} < {w} real windows")
-        pad = pad_windows - w
-        tab = {k: np.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1),
-                         mode="edge") for k, v in tab.items()}
     tab["win_start"] = win_start
     tab["win_of_tick"] = (np.searchsorted(win_start, np.arange(n_ticks),
                                           side="right") - 1).astype(np.int32)
+    if pad_windows is not None:
+        tab = pad_tables(tab, pad_windows)
     return tab
 
 
-def from_fault_schedule(faults) -> Scenario:
-    """Compatibility shim: compile a netsim.FaultSchedule to the equivalent
-    Scenario (same crash semantics, same seeded DDoS draw stream)."""
-    events = []
-    if faults.crash_time_s is not None:
-        for i, t_s in enumerate(np.asarray(faults.crash_time_s, np.float64)):
-            if np.isfinite(t_s):
-                # the seed-era check was t < float32(t_s * 1000 / tick_ms);
-                # ceil of that value is the first dead tick either way
-                events.append(Crash(start_s=float(t_s), targets=(i,)))
-    if faults.ddos:
-        events.append(TargetedDelay(
-            delay_ms=faults.ddos_attack_delay_ms, targets="random-minority",
-            repick_s=faults.ddos_repick_s, seed=faults.ddos_seed))
-    return Scenario(name="fault-schedule", events=tuple(events))
-
-
 def as_scenario(obj) -> Scenario:
-    """Normalize None / Scenario / FaultSchedule to a Scenario."""
+    """Normalize None / Scenario to a Scenario."""
     if obj is None:
         return Scenario()
     if isinstance(obj, Scenario):
         return obj
-    from repro.core.netsim import FaultSchedule
-    if isinstance(obj, FaultSchedule):
-        return from_fault_schedule(obj)
-    raise TypeError(f"expected Scenario or FaultSchedule, got {type(obj)}")
+    raise TypeError(f"expected Scenario or None, got {type(obj)}")

@@ -58,8 +58,8 @@ def resolve_targets(targets: Targets, n: int) -> np.ndarray:
 def _tick(cfg: SMRConfig, seconds: float, n_ticks: int) -> int:
     """First tick at or after a point in time, clipped to the sim. The
     boundary is computed in float32 — the simulator's native time precision
-    (and what the seed-era ``t < crash_tick`` compare used, which keeps the
-    FaultSchedule shim exact)."""
+    (and what the seed-era ``t < crash_tick`` compare used, which keeps
+    these primitives bitwise-exact against the seed-era fault model)."""
     if not math.isfinite(seconds):
         return n_ticks
     ticks = np.float32(seconds * 1000.0 / cfg.tick_ms)
@@ -219,7 +219,7 @@ class TargetedDelay:
     delay_ms each way over [start_s, end_s). Attack a fixed set ("leader",
     "minority", explicit indices) or, with targets="random-minority" and a
     repick_s, a seeded random minority re-picked per repick window — the
-    exact seed-era ``FaultSchedule(ddos=True)`` attack."""
+    exact seed-era DDoS fault-schedule attack."""
     delay_ms: float = 800.0
     targets: Targets = "minority"
     start_s: float = 0.0
@@ -250,7 +250,7 @@ class TargetedDelay:
                 raise ValueError("random-minority requires repick_s")
             repick = self._repick_ticks(cfg)
             # one sequential RandomState stream, row k = k-th repick window
-            # (matches FaultSchedule's pre-generated attacked-minority table)
+            # (matches the seed-era pre-generated attacked-minority table)
             n_draws = ((int(win_start[ws[-1]]) - t0) // repick + 1
                        if len(ws) else 0)
             rng = np.random.RandomState(self.seed)

@@ -14,9 +14,17 @@ except ImportError:                      # degrade: only property tests skip
 from repro.configs.smr import SMRConfig
 from repro.core.coin import coin_table, common_coin_flip
 from repro.core.harness import run_sim
-from repro.core.netsim import FaultSchedule
+from repro.scenarios import Crash, Scenario, library
 
 CFG = SMRConfig(sim_seconds=2.0)
+
+
+def _crash_at(times_s) -> Scenario:
+    """Permanent crashes at per-replica times (inf = never) — the seed-era
+    crash-schedule semantics as Scenario primitives."""
+    return Scenario("crash", tuple(
+        Crash(start_s=float(t), targets=(i,))
+        for i, t in enumerate(times_s) if np.isfinite(t)))
 
 
 def test_coin_determinism_and_range():
@@ -73,7 +81,7 @@ def test_sporades_liveness_under_leader_crash():
     crash = np.full(5, np.inf)
     crash[0] = 0.7              # L_0 dies mid-run
     r = run_sim("mandator-sporades", CFG, rate_tx_s=20_000,
-                faults=FaultSchedule(crash_time_s=crash))
+                scenario=_crash_at(crash))
     tl = r["timeline"]
     # commits continue in the last quarter of the run (post-crash)
     assert tl[-1] > 0 or tl[-2] > 0
@@ -84,7 +92,7 @@ def test_sporades_liveness_under_leader_crash():
 def test_sporades_liveness_under_ddos():
     r = run_sim("mandator-sporades",
                 SMRConfig(sim_seconds=3.0), rate_tx_s=50_000,
-                faults=FaultSchedule(ddos=True, ddos_repick_s=1.0))
+                scenario=library.get("paper-ddos", 3.0))
     assert r["throughput"] > 1_000         # stays live
     _check_safety(np.asarray(r["cvc_all"]))
 
@@ -95,7 +103,7 @@ def test_multipaxos_commits_and_crash_dip():
     crash = np.full(5, np.inf)
     crash[0] = 0.7
     r2 = run_sim("multipaxos", CFG, rate_tx_s=20_000,
-                 faults=FaultSchedule(crash_time_s=crash))
+                 scenario=_crash_at(crash))
     assert r2["throughput"] < r["throughput"]   # crash hurts
     assert np.asarray(r2["timeline"])[-1] > 0   # but a new leader recovers
 
@@ -115,7 +123,7 @@ def _random_crash_case(seed):
     idx = rng.choice(5, size=2, replace=False)
     crash[idx] = rng.uniform(0.2, 1.5, size=2)
     r = run_sim("mandator-sporades", CFG, rate_tx_s=20_000,
-                faults=FaultSchedule(crash_time_s=crash), seed=seed % 7)
+                scenario=_crash_at(crash), seed=seed % 7)
     _check_safety(np.asarray(r["cvc_all"]))
 
 

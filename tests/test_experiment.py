@@ -1,6 +1,6 @@
 """Batched experiment engine (core/experiment.py): a vmapped sweep grid must
 compile exactly once per protocol and produce bitwise-identical metrics to
-the equivalent sequence of single run_sim calls (same seeds/faults)."""
+the equivalent sequence of single run_sim calls (same seeds/scenarios)."""
 import numpy as np
 import pytest
 
@@ -8,7 +8,7 @@ from repro.configs.smr import SMRConfig
 from repro.core import experiment
 from repro.core.experiment import SweepSpec, run_sweep
 from repro.core.harness import run_sim
-from repro.core.netsim import FaultSchedule
+from repro.scenarios import Crash, Scenario, TargetedDelay
 
 CFG = SMRConfig(sim_seconds=1.0)
 SCALARS = ("throughput", "median_ms", "p99_ms", "committed")
@@ -38,20 +38,24 @@ def test_grid_matches_sequential_run_sim(protocol):
                                        seed=seed))
 
 
-def test_fault_variants_stack_into_one_program():
-    """Heterogeneous FaultSchedules (none / crash / DDoS) batch through the
-    stacked-env path and still match their single-point runs."""
-    crash = np.full(5, np.inf)
-    crash[0] = 0.5
-    faults = (FaultSchedule(), FaultSchedule(crash_time_s=crash),
-              FaultSchedule(ddos=True, ddos_repick_s=0.5))
-    spec = SweepSpec(rates=(20_000,), faults=faults)
+def test_scenario_variants_stack_into_one_program():
+    """Heterogeneous scenarios (none / crash / DDoS) batch through the
+    stacked-env path and still match their single-point runs. The DDoS
+    variant also forces the sweep-wide auto horizon (1024 >> the crash
+    variants' standalone bound), so this pins that a shared ring size
+    keeps every point bitwise equal to its own single run."""
+    scenarios = (None,
+                 Scenario("crash", (Crash(start_s=0.5, targets=(0,)),)),
+                 Scenario("ddos", (TargetedDelay(
+                     delay_ms=800.0, targets="random-minority",
+                     repick_s=0.5, seed=7),)))
+    spec = SweepSpec(rates=(20_000,), scenarios=scenarios)
     experiment.reset_trace_counts()
     grid = run_sweep("mandator-sporades", CFG, spec)
     assert experiment.trace_counts()["mandator-sporades"] == 1
     for r, (rate, seed, fi, _) in zip(grid, spec.points()):
         single = run_sim("mandator-sporades", CFG, rate_tx_s=rate,
-                         faults=faults[fi], seed=seed)
+                         scenario=scenarios[fi], seed=seed)
         _assert_point_equal(r, single)
         np.testing.assert_array_equal(r["cvc_all"], single["cvc_all"])
 

@@ -1,9 +1,9 @@
-"""Scenario engine (repro/scenarios): primitive -> windowed-table lowering,
-the FaultSchedule compatibility shim (bitwise-equal env tables, so the
-fig 6-9 artifacts are unchanged by the netsim refactor), scenario grids
-batching through run_sweep as ONE compiled program, and the partition
-semantics the paper's robustness story hinges on (a cut minority stops
-committing; a healed one catches up)."""
+"""Scenario engine (repro/scenarios): primitive -> windowed-table lowering
+(pinned bitwise against the seed-era fault-model reference, so the fig 6-9
+artifacts are unchanged by the netsim refactors), the auto-sized channel
+delay horizon, scenario grids batching through run_sweep as ONE compiled
+program, and the partition semantics the paper's robustness story hinges
+on (a cut minority stops committing; a healed one catches up)."""
 import math
 
 import numpy as np
@@ -13,7 +13,6 @@ from repro.configs.smr import SMRConfig
 from repro.core import experiment, netsim
 from repro.core.experiment import SweepSpec, run_sweep
 from repro.core.harness import run_sim
-from repro.core.netsim import FaultSchedule
 from repro.scenarios import (
     BandwidthThrottle,
     Crash,
@@ -23,7 +22,6 @@ from repro.scenarios import (
     Scenario,
     TargetedDelay,
     as_scenario,
-    from_fault_schedule,
     library,
     lower,
 )
@@ -32,23 +30,25 @@ CFG = SMRConfig(sim_seconds=2.0)
 N = CFG.n_replicas
 
 
-# ---------------------------------------------------------------- shim ----
+# ------------------------------------------- seed-era fault semantics ----
 
-def test_fault_schedule_ddos_tables_bitwise():
-    """The compiled shim reproduces the seed-era per-tick link_delay —
-    same seeded attacked-minority stream, same float32 arithmetic — which
-    is what keeps the fig 6-9 artifacts bitwise identical."""
-    fs = FaultSchedule(ddos=True, ddos_repick_s=0.5)
-    env = netsim.build_env(CFG, fs)
+def test_ddos_tables_match_seed_era_reference_bitwise():
+    """The random-minority TargetedDelay reproduces the seed-era per-tick
+    link_delay — same seeded attacked-minority stream, same float32
+    arithmetic — which is what keeps the fig 6-9 artifacts bitwise
+    identical across the fault-model rewrites."""
+    sc = Scenario("ddos", (TargetedDelay(
+        delay_ms=800.0, targets="random-minority", repick_s=0.5, seed=7),))
+    env = netsim.build_env(CFG, sc)
     # seed-era reference, computed the way the old netsim did
-    rng = np.random.RandomState(fs.ddos_seed)
-    repick = max(1, int(fs.ddos_repick_s * 1000 / CFG.tick_ms))
-    w = int(np.ceil(CFG.sim_seconds / fs.ddos_repick_s)) + 1
+    rng = np.random.RandomState(7)
+    repick = max(1, int(0.5 * 1000 / CFG.tick_ms))
+    w = int(np.ceil(CFG.sim_seconds / 0.5)) + 1
     att = np.zeros((w, N), bool)
     for k in range(w):
         att[k, rng.choice(N, size=(N - 1) // 2, replace=False)] = True
     delays = np.asarray(CFG.delays_ms() / CFG.tick_ms, np.float32)
-    dd = np.float32(fs.ddos_attack_delay_ms / CFG.tick_ms)
+    dd = np.float32(800.0 / CFG.tick_ms)
     for t in (0, 1, 499, 500, 999, 1000, 1500, 1999):
         a = att[min(t // repick, w - 1)]
         ref = delays + (a[:, None] | a[None, :]) * dd
@@ -57,28 +57,55 @@ def test_fault_schedule_ddos_tables_bitwise():
         assert np.asarray(netsim.link_drop(env, t)).sum() == 0
 
 
-def test_fault_schedule_crash_tables_bitwise():
+def test_crash_tables_match_seed_era_reference_bitwise():
     crash = np.full(N, np.inf)
     crash[0], crash[3] = 0.7, 1.2345
-    env = netsim.build_env(CFG, FaultSchedule(crash_time_s=crash))
+    sc = Scenario("crash", tuple(
+        Crash(start_s=float(t), targets=(i,))
+        for i, t in enumerate(crash) if np.isfinite(t)))
+    env = netsim.build_env(CFG, sc)
     crash_tick = crash * 1000.0 / CFG.tick_ms
     for t in (0, 699, 700, 701, 1234, 1235, 1999):
         np.testing.assert_array_equal(np.asarray(netsim.alive(env, t)),
                                       t < crash_tick, err_msg=f"t={t}")
 
 
-def test_fault_schedule_equals_compiled_scenario_end_to_end():
-    """run_sim under the shim == run_sim under its compiled Scenario,
-    bit for bit (same env tables -> same program -> same metrics)."""
+# ------------------------------------------------- auto delay horizon ----
+
+def test_auto_horizon_covers_library_scenarios():
+    """The resolved ring size strictly exceeds the largest static link +
+    scenario delay for every curated adversary (any delivered message fits
+    without clipping), and is a power of two."""
+    lib = library.scenarios(CFG.sim_seconds, N)
+    static = float(np.max(CFG.delays_ms()) / CFG.tick_ms)
+    for name, sc in lib.items():
+        cfg = netsim.resolve_horizon(CFG, (sc,))
+        h = cfg.delay_horizon_ticks
+        assert h & (h - 1) == 0, f"{name}: horizon {h} not a power of two"
+        extra = float(np.max(lower(CFG, sc)["extra_delay"], initial=0.0))
+        assert h > static + extra, \
+            f"{name}: horizon {h} <= static delay bound {static + extra}"
+
+
+def test_auto_horizon_matches_seed_era_2048_end_to_end():
+    """run_sim with the auto-sized ring == run_sim with the seed-era fixed
+    2048 ring, bit for bit — shrinking the horizon must never change what
+    gets delivered (this is what keeps the fig 6-9 artifacts identical)."""
+    import dataclasses
     cfg = SMRConfig(sim_seconds=1.0)
-    fs = FaultSchedule(ddos=True, ddos_repick_s=0.5)
-    a = run_sim("mandator-sporades", cfg, rate_tx_s=20_000, faults=fs)
-    b = run_sim("mandator-sporades", cfg, rate_tx_s=20_000,
-                faults=from_fault_schedule(fs))
-    for k in ("throughput", "median_ms", "p99_ms", "committed"):
-        assert a[k] == b[k] or (np.isnan(a[k]) and np.isnan(b[k]))
-    np.testing.assert_array_equal(a["timeline"], b["timeline"])
-    np.testing.assert_array_equal(a["cvc_all"], b["cvc_all"])
+    assert cfg.delay_horizon_ticks == "auto"
+    pinned = dataclasses.replace(cfg, delay_horizon_ticks=2048)
+    ddos = Scenario("ddos", (TargetedDelay(
+        delay_ms=800.0, targets="random-minority", repick_s=0.5, seed=7),))
+    for proto, scenario in (("mandator-sporades", None),
+                            ("mandator-sporades", ddos),
+                            ("multipaxos", None)):
+        a = run_sim(proto, cfg, rate_tx_s=30_000, scenario=scenario)
+        b = run_sim(proto, pinned, rate_tx_s=30_000, scenario=scenario)
+        for k in ("throughput", "median_ms", "p99_ms", "committed"):
+            assert a[k] == b[k] or (np.isnan(a[k]) and np.isnan(b[k])), \
+                (proto, k, a[k], b[k])
+        np.testing.assert_array_equal(a["timeline"], b["timeline"])
 
 
 # ------------------------------------------------------------- lowering ----
@@ -132,16 +159,22 @@ def test_gray_failure_deterministic_and_bounded():
 
 
 def test_static_delay_over_horizon_rejected():
+    """A pinned (int) horizon below the static delay is a hard error; the
+    "auto" default would instead absorb it by growing the ring."""
+    import dataclasses
+    pinned = dataclasses.replace(CFG, delay_horizon_ticks=2048)
     with pytest.raises(ValueError, match="delay_horizon_ticks"):
-        netsim.build_env(CFG, Scenario("x", (
+        netsim.build_env(pinned, Scenario("x", (
             TargetedDelay(delay_ms=1e6, targets="minority"),)))
+    big = netsim.build_env(CFG, Scenario("x", (
+        TargetedDelay(delay_ms=1e6, targets="minority"),)))
+    assert big is not None
 
 
 def test_as_scenario_normalizes():
     assert as_scenario(None).events == ()
     s = Scenario("s")
     assert as_scenario(s) is s
-    assert as_scenario(FaultSchedule()).events == ()
     with pytest.raises(TypeError):
         as_scenario(42)
 
@@ -165,7 +198,7 @@ def test_scenario_grid_is_one_compiled_program():
     cfg = SMRConfig(sim_seconds=1.0)
     lib = library.scenarios(cfg.sim_seconds, N)
     scens = (lib["baseline"], lib["symmetric-partition"], lib["gray-wan"])
-    spec = SweepSpec(rates=(10_000, 30_000), faults=scens)
+    spec = SweepSpec(rates=(10_000, 30_000), scenarios=scens)
     experiment.reset_trace_counts()
     grid = run_sweep("mandator-sporades", cfg, spec)
     assert experiment.trace_counts()["mandator-sporades"] == 1, \
@@ -173,7 +206,7 @@ def test_scenario_grid_is_one_compiled_program():
     assert len(grid) == 6
     for r, (rate, seed, fi, _) in zip(grid, spec.points()):
         single = run_sim("mandator-sporades", cfg, rate_tx_s=rate,
-                         faults=scens[fi], seed=seed)
+                         scenario=scens[fi], seed=seed)
         for k in ("throughput", "median_ms", "p99_ms", "committed"):
             assert r[k] == single[k] or (np.isnan(r[k])
                                          and np.isnan(single[k]))
@@ -194,7 +227,7 @@ def test_partition_blocks_minority_then_heals():
     minority, majority = (1, 2), (0, 3, 4)
     cut = Partition(1.0, 2.0, (minority, majority))
     healed = run_sim("mandator-sporades", cfg, rate_tx_s=20_000,
-                     faults=Scenario("heal", (cut,)))
+                     scenario=Scenario("heal", (cut,)))
     cvc = np.asarray(healed["cvc_all"])
     # in-flight drain margin: one max-RTT after the cut (~163 tick link)
     stall0 = _cvc_sum(cvc, 1, 1500)
@@ -208,7 +241,7 @@ def test_partition_blocks_minority_then_heals():
     assert np.asarray(healed["timeline"])[-1] > 0
 
     forever = run_sim("mandator-sporades", cfg, rate_tx_s=20_000,
-                      faults=Scenario("cut", (
+                      scenario=Scenario("cut", (
                           Partition(1.0, math.inf, (minority, majority)),)))
     cvc2 = np.asarray(forever["cvc_all"])
     assert _cvc_sum(cvc2, 1, 2999) == _cvc_sum(cvc2, 1, 1500), \

@@ -197,7 +197,7 @@ def test_workload_grid_is_one_compiled_program_and_matches_sequential():
     wls = (None, library.get("onoff-burst", cfg.sim_seconds, N),
            library.get("closed-loop", cfg.sim_seconds, N))
     spec = SweepSpec(rates=(10_000, 30_000),
-                     faults=(scen["baseline"], scen["paper-ddos"]),
+                     scenarios=(scen["baseline"], scen["paper-ddos"]),
                      workloads=wls)
     experiment.reset_trace_counts()
     grid = run_sweep("mandator-sporades", cfg, spec)
@@ -206,7 +206,7 @@ def test_workload_grid_is_one_compiled_program_and_matches_sequential():
     assert len(grid) == spec.size == 12
     for r, (rate, seed, fi, wi) in zip(grid, spec.points()):
         single = run_sim("mandator-sporades", cfg, rate_tx_s=rate,
-                         faults=spec.faults[fi], seed=seed,
+                         scenario=spec.scenarios[fi], seed=seed,
                          workload=wls[wi])
         _assert_point_equal(r, single)
 
@@ -235,7 +235,8 @@ def test_analytic_baselines_consume_workload_tables():
         assert closed["committed"] <= base["committed"] + 1e-6
 
 
-def test_fault_schedule_is_deprecated():
-    from repro.core.netsim import FaultSchedule
-    with pytest.warns(DeprecationWarning, match="FaultSchedule"):
-        FaultSchedule()
+def test_fault_schedule_is_removed():
+    """The deprecated seed-era shim is gone (deprecated in PR 3,
+    removed in PR 5) — new callers pass Scenarios to run_sweep/run_sim."""
+    from repro.core import netsim
+    assert not hasattr(netsim, "FaultSchedule")
