@@ -1,17 +1,29 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``.
 """Benchmark driver:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6,roofline,...]
+      [--cache-dir DIR] [--no-compile-cache]
 
 Figure suites dispatch through the batched experiment engine
 (repro.core.experiment): each protocol's whole rate grid compiles once and
-runs as a single vmapped program; the per-suite stderr line reports
-wall-clock and the cumulative jit-trace count.
+runs as a single vmapped program — and, since the canonical-program-
+signature work, the fig 6/7/9 suites all reuse ONE compiled program per
+protocol, so only the first suite pays a trace.
 
-Every run also writes ``BENCH_core.json`` at the repo root — per-suite
-wall-clock with the compile-vs-run split and the resolved channel-ring
-horizon (experiment.timing_stats) — so the perf trajectory is tracked
-across PRs; the ``channel`` suite's packed-vs-legacy comparison lands in
-``benchmarks/artifacts/channel_bench.json``.
+The persistent XLA compilation cache (repro.core.compile_cache) is enabled
+by default at the repo-local ``.jax_cache`` directory
+(``JAX_COMPILATION_CACHE_DIR`` or ``--cache-dir`` overrides), so a repeat
+run — another process, CI with the cache restored — skips XLA compilation
+entirely and pays only tracing.
+
+Every run also writes ``BENCH_core.json`` at the repo root: per-suite
+wall-clock at millisecond precision, the compile-vs-run split, the
+compile-accounting fields (jit traces, distinct program signatures,
+persistent-cache hits/misses, true backend-compile seconds), and the
+resolved channel-ring horizon — so the perf trajectory is tracked across
+PRs. Microbench suites (channel/kernels) get their compile/run split from
+the jax.monitoring backend-compile counters instead of the sweep engine's
+dispatch timers. The ``channel`` suite's packed-vs-legacy comparison lands
+in ``benchmarks/artifacts/channel_bench.json``.
 """
 from __future__ import annotations
 
@@ -27,7 +39,7 @@ from benchmarks import figures  # noqa: E402
 from benchmarks import roofline  # noqa: E402
 from benchmarks.bench_kernels import bench as kernel_bench  # noqa: E402
 from benchmarks.bench_kernels import bench_channel  # noqa: E402
-from repro.core import experiment  # noqa: E402
+from repro.core import compile_cache, experiment  # noqa: E402
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -45,9 +57,21 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="shorter sims (2s instead of 4s)")
     ap.add_argument("--only", default="")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compile-cache directory "
+                         "(default: repo-local .jax_cache)")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="disable the persistent XLA compilation cache "
+                         "(every process recompiles)")
     args, _ = ap.parse_known_args()
     sim_s = 2.0 if args.quick else 4.0
     only = set(args.only.split(",")) if args.only else None
+
+    if args.no_compile_cache:
+        compile_cache.disable()
+    else:
+        cache_dir = compile_cache.enable(args.cache_dir)
+        print(f"# persistent compile cache: {cache_dir}", file=sys.stderr)
 
     figures.ART.mkdir(parents=True, exist_ok=True)
     suites = {
@@ -71,11 +95,17 @@ def main() -> None:
     print("name,us_per_call,derived")
     errored = []
     bench_core: dict = {"suites": {}}
+    # traces/signatures accumulate ACROSS suites (per-suite deltas below):
+    # resetting between suites would hide that fig7/fig9 reuse fig6's
+    # canonical program — a 0-trace suite is the headline, not an artifact
+    experiment.reset_trace_counts()
     for name, fn in suites.items():
         if only and name not in only:
             continue
         experiment.reset_timing_stats()
-        t0 = time.time()
+        cache0 = compile_cache.stats()
+        traces0 = sum(experiment.trace_counts().values())
+        t0 = time.perf_counter()
         suite_error = None
         try:
             for row in fn():
@@ -84,18 +114,36 @@ def main() -> None:
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
             errored.append(name)
             suite_error = type(e).__name__
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         stats = experiment.timing_stats()
+        cache_d = compile_cache.delta(cache0)
+        # 3-decimal (ms) precision everywhere: warm-cache suites run in
+        # milliseconds, and "0.0" is not a trajectory point
         entry = {
             # per-suite so merged files can't mix quick/full timings
             # under one misleading top-level flag
             "quick": args.quick,
-            "wall_s": round(wall, 2),
+            "wall_s": round(wall, 3),
             # first-dispatch (trace+compile+first run) vs cache-hit split
+            # from the sweep engine; microbench suites have no sweep
+            # dispatches, so their split comes from the monitoring-based
+            # backend-compile counters instead
             "compile_s": round(sum(s["compile_s"] for s in stats.values()),
-                               2),
-            "run_s": round(sum(s["run_s"] for s in stats.values()), 2),
+                               3),
+            "run_s": round(sum(s["run_s"] for s in stats.values()), 3),
+            # compile accounting (repro.core.compile_cache + experiment):
+            # jit traces this suite, true XLA backend-compile seconds, and
+            # persistent-cache traffic — a warm suite shows traces>0 but
+            # misses==0 and xla_compile_s~0
+            "traces": sum(experiment.trace_counts().values()) - traces0,
+            "xla_compile_s": round(cache_d["backend_compile_s"], 3),
+            "cache_hits": cache_d["persistent_cache_hits"],
+            "cache_misses": cache_d["persistent_cache_misses"],
+            "cache_saved_s": round(cache_d["compile_saved_s"], 3),
         }
+        if not stats:
+            entry["compile_s"] = entry["xla_compile_s"]
+            entry["run_s"] = round(wall - cache_d["backend_compile_s"], 3)
         if suite_error is not None:
             # a partial run's wall-clock is not a trajectory point —
             # mark it so cross-PR comparisons can filter it out
@@ -105,9 +153,13 @@ def main() -> None:
         if horizons:
             entry["ring_horizon"] = horizons
         bench_core["suites"][name] = entry
-        traces = sum(experiment.trace_counts().values())
-        print(f"# {name} done in {wall:.0f}s "
-              f"(sweep traces so far: {traces})", file=sys.stderr)
+        print(f"# {name} done in {wall:.2f}s "
+              f"({entry['traces']} new traces, "
+              f"{entry['cache_misses']} compile-cache misses)",
+              file=sys.stderr)
+    # distinct canonical programs per protocol, across every suite run
+    bench_core["programs"] = {
+        p: len(s) for p, s in experiment.program_signatures().items()}
     # merge into the tracked trajectory file: partial (--only) runs update
     # just the suites they ran instead of discarding the rest
     bench_path = REPO / "BENCH_core.json"

@@ -30,6 +30,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 from repro.configs.smr import REGIONS, SMRConfig
+from repro.core import compile_cache
 from repro.core.experiment import SweepSpec, run_sweep
 from repro.scenarios import Crash, Scenario
 from repro.scenarios import library
@@ -131,7 +132,16 @@ def main() -> None:
                          "(composes with --scenario)")
     ap.add_argument("--sim-seconds", type=float, default=4.0)
     ap.add_argument("--rate", type=float, default=100_000)
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="disable the persistent XLA compile cache "
+                         "(the first demo run seeds it; repeat runs then "
+                         "skip XLA compilation entirely)")
     args = ap.parse_args()
+    if args.no_compile_cache:
+        compile_cache.disable()
+    else:
+        print(f"# persistent compile cache: {compile_cache.enable()}",
+              file=sys.stderr)
     if args.workload:
         workload_showcase(args.workload, args.scenario, args.sim_seconds,
                           args.rate)

@@ -26,11 +26,34 @@ on the host behind the same API (time-varying rates come from the same
 compiled tables via ``workloads.analytic``) so callers can sweep any
 protocol.
 
-``trace_counts()`` exposes how many times each protocol's program was
-traced — the equivalence tests (tests/test_experiment.py,
-tests/test_workloads.py) pin a whole grid to one trace — and
+**Canonical program signatures.** Tracing + XLA-compiling a sweep program
+dominates total wall-clock (BENCH_core.json: >=95% of every fig suite), so
+``run_sweep`` canonicalizes program *shapes* by default: the
+scenario/workload window tables round up to power-of-two floors, the
+auto-resolved ring horizon to ``netsim.CANONICAL_HORIZON``, and the
+program's batch width pins to ``CANONICAL_LANES`` (one lane) with the
+grid executed as per-point async dispatches of that one program. Every
+sweep with the same replica count, tick count, ring horizon, and
+workload mode — the fig 6/7/9 suites, the robustness and workload
+matrices, every ``run_sim`` single point — therefore reuses ONE compiled
+program per protocol instead of compiling per-suite shape variants.
+Canonicalization is inert by construction (vmap lanes are independent,
+pad window rows are never indexed, a larger ring never clips a valid
+delivery), and tests/test_scenarios.py pins canonical == native bitwise.
+Pass ``canonical=False`` to lower and dispatch the whole grid at its
+native width.
+
+**Compile accounting.** ``trace_counts()`` exposes how many times each
+protocol's program was traced — the equivalence tests
+(tests/test_experiment.py, tests/test_workloads.py) pin a whole grid to
+one trace — ``program_signatures()`` the distinct compiled signatures per
+protocol (tests/test_compile_cache.py pins figs 6/7/9 to one), and
 ``timing_stats()`` the compile-vs-run wall-clock split plus the resolved
-ring horizon, which benchmarks/run.py persists to BENCH_core.json.
+ring horizon. ``compile_report()`` joins all of that with the
+persistent-cache counters (``repro.core.compile_cache``), which
+benchmarks/run.py persists per suite to BENCH_core.json. Every sweep also
+``compile_cache.ensure()``s the persistent cache, so repeat processes pay
+XLA compile once ever.
 """
 from __future__ import annotations
 
@@ -46,12 +69,44 @@ import numpy as np
 
 from repro import workloads as wlc
 from repro.configs.smr import SMRConfig
-from repro.core import harness, netsim
+from repro.core import compile_cache, harness, netsim
 
 ANALYTIC_PROTOCOLS = ("epaxos", "rabia")
 
+# Canonical program width: ONE lane. A canonical sweep executes its grid
+# as per-point dispatches of a single-lane compiled program, so a 1-point
+# run_sim, a 4-rate fig sweep, and a 16-cell robustness matrix all share
+# the same executable with zero padded (wasted) device work — padding the
+# batch axis instead was measured at up to 4x execution wall on
+# single-point sweeps. Window rows DO pad (rows are cheap: they are never
+# indexed past the real count) to a power-of-two floor so a baseline
+# (W=1) and a crash schedule (W=3) share one program.
+CANONICAL_LANES = 1
+CANONICAL_MIN_WINDOWS = 8
+
 _TRACE_COUNTS: Dict[str, int] = {}
 _TIMING: Dict[str, Dict[str, float]] = {}
+_SIGNATURES: Dict[str, set] = {}
+
+
+@dataclass(frozen=True, order=True)
+class ProgramSignature:
+    """The static shape key of one compiled sweep program. Two sweeps with
+    equal signatures (and equal protocol / cfg statics / workload mode)
+    hit the same jit cache entry — zero new traces, zero new compiles."""
+    n: int             # replicas
+    ticks: int         # scan length (sim_seconds / tick_ms)
+    lanes: int         # compiled batch width (CANONICAL_LANES | grid size)
+    scen_windows: int  # scenario window-table rows (padded)
+    wl_windows: int    # workload window-table rows (padded)
+    horizon: int       # channel-ring slots (Dmax)
+    trivial: bool      # workload-mode statics
+    closed: bool
+
+
+def _canon_pow2(x: int, floor: int) -> int:
+    """Next power of two >= x, floored at ``floor``."""
+    return max(floor, 1 << (max(1, x) - 1).bit_length())
 
 
 def trace_counts() -> Dict[str, int]:
@@ -60,14 +115,40 @@ def trace_counts() -> Dict[str, int]:
 
 
 def reset_trace_counts() -> None:
+    """Reset the per-protocol trace counters and signature sets (the jit
+    cache itself is untouched — a reused program still counts 0 traces)."""
     _TRACE_COUNTS.clear()
+    _SIGNATURES.clear()
+
+
+def program_signatures() -> Dict[str, tuple]:
+    """Distinct ``ProgramSignature``s lowered per protocol since the last
+    ``reset_trace_counts()`` — the test oracle for "these suites share one
+    compiled program"."""
+    return {p: tuple(sorted(s)) for p, s in _SIGNATURES.items()}
+
+
+def compile_report() -> Dict:
+    """First-class compile accounting: per-protocol traces and distinct
+    program signatures (since the last reset) plus the process-wide
+    persistent-cache counters (hits/misses, backend-compile seconds,
+    compile seconds saved). benchmarks/run.py snapshots this per suite
+    into BENCH_core.json."""
+    return {
+        "traces": trace_counts(),
+        "programs": {p: len(s) for p, s in _SIGNATURES.items()},
+        "signatures": program_signatures(),
+        "cache": compile_cache.stats(),
+    }
 
 
 def timing_stats() -> Dict[str, Dict[str, float]]:
     """Per-protocol wall-clock of the sweep dispatches since the last
-    reset: ``compile_s`` (calls that traced — compile + first run),
-    ``run_s`` (cache-hit calls), ``dispatches``, and ``horizon`` (the
-    resolved ring size of the latest sweep)."""
+    reset: ``compile_s`` (dispatches that traced: trace + lower + backend
+    compile or persistent-cache load — execution is excluded because
+    dispatch is async), ``run_s`` (cache-hit dispatch overhead plus every
+    ``collect()``'s execution + readback wall), ``dispatches``, and
+    ``horizon`` (the resolved ring size of the latest sweep)."""
     return {k: dict(v) for k, v in _TIMING.items()}
 
 
@@ -101,21 +182,89 @@ class SweepSpec:
                 * len(self.workloads))
 
 
-@partial(jax.jit, static_argnames=("protocol", "cfg", "mode"))
-def _sweep_compiled(protocol: str, cfg: SMRConfig, mode: wlc.WorkloadMode,
-                    env_b: Dict, wl_b: Dict, rate_b: jax.Array,
-                    seed_b: jax.Array) -> Dict:
-    # body executes only while tracing, so this counts compilations
+def _sweep_body(protocol: str, cfg: SMRConfig, mode: wlc.WorkloadMode,
+                env_b: Dict, wl_b: Dict, rate_b: jax.Array,
+                seed_b: jax.Array) -> Dict:
+    # body executes only while tracing, so this counts program builds
     _TRACE_COUNTS[protocol] = _TRACE_COUNTS.get(protocol, 0) + 1
     return jax.vmap(lambda env, wlt, rate, seed: harness.sim_point(
         protocol, cfg, env, rate, seed, wlt, mode))(
         env_b, wl_b, rate_b, seed_b)
 
 
-def _lower(cfg: SMRConfig, spec: SweepSpec):
+_sweep_compiled = partial(
+    jax.jit, static_argnames=("protocol", "cfg", "mode"))(_sweep_body)
+
+# materialized canonical programs by key: in-memory second level of the
+# program store (the disk level lives in compile_cache.program_dir())
+_PROGRAMS: Dict[str, "jax.stages.Wrapped"] = {}
+
+
+def _program_key(protocol: str, cfg: SMRConfig, mode: wlc.WorkloadMode,
+                 args: tuple) -> str:
+    """Disk key of one canonical program: everything that shapes the
+    traced computation (protocol + cfg + workload-mode statics, the arg
+    pytree structure with shapes/dtypes) plus the source fingerprint —
+    editing any simulator source invalidates every stored program."""
+    import hashlib
+    leaves, treedef = jax.tree.flatten(args)
+    parts = [protocol, repr(cfg), repr(mode),
+             compile_cache.source_fingerprint(), str(treedef)]
+    parts += [f"{np.asarray(x).dtype}{np.asarray(x).shape}" for x in leaves]
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:32]
+
+
+def _acquire_program(protocol: str, cfg: SMRConfig, mode: wlc.WorkloadMode,
+                     args: tuple):
+    """Return the callable for the canonical sweep program, building it at
+    most once ever: in-memory first, then the on-disk program store (a
+    ``jax.export`` blob — loading skips tracing AND lowering), and only
+    as a last resort a fresh trace (which is then serialized for every
+    future process). The XLA executable underneath is covered separately
+    by the persistent compilation cache."""
+    key = _program_key(protocol, cfg, mode, args)
+    fn = _PROGRAMS.get(key)
+    if fn is not None:
+        return fn
+    from jax import export as jax_export
+    d = compile_cache.program_dir()
+    path = d / f"{protocol}-{key}.bin" if d is not None else None
+    exp = None
+    if path is not None and path.exists():
+        try:
+            exp = jax_export.deserialize(path.read_bytes())
+            # a loaded program counts as materialized, exactly like a
+            # fresh trace would — per-process accounting stays identical
+            # whether the store was warm or cold
+            _TRACE_COUNTS[protocol] = _TRACE_COUNTS.get(protocol, 0) + 1
+        except Exception:
+            exp = None
+    if exp is None:
+        f = jax.jit(partial(_sweep_body, protocol, cfg, mode))
+        exp = jax_export.export(f)(*args)  # traces once (body counts it)
+        if path is not None:
+            try:
+                path.write_bytes(exp.serialize())
+            except OSError:
+                pass
+    fn = jax.jit(exp.call)
+    _PROGRAMS[key] = fn
+    return fn
+
+
+def _lower(cfg: SMRConfig, spec: SweepSpec, canonical: bool = True):
     """Flatten the grid to stacked per-point inputs (env leaves, workload
     table leaves, rate, seed) plus the static workload mode and the
-    horizon-resolved cfg (one ring shape for the whole grid)."""
+    horizon-resolved cfg (one ring shape for the whole grid). With
+    ``canonical`` (the default), the shape axes are rounded to the
+    canonical program signature: window tables pad to a power-of-two
+    floor (pad rows are never indexed — ``win_of_tick`` only addresses
+    real windows), the auto horizon rounds up to
+    ``netsim.CANONICAL_HORIZON``, and the program width is pinned to
+    ``CANONICAL_LANES`` — the grid then executes as per-point dispatches
+    of that one program (lanes are independent under vmap, so chunked
+    execution is bitwise identical to one wide dispatch; pinned in
+    tests)."""
     from repro import scenarios as sc
     pts = list(spec.points())
     # lower every scenario ONCE: the tables feed both the sweep-wide
@@ -126,34 +275,110 @@ def _lower(cfg: SMRConfig, spec: SweepSpec):
     # sweep-wide resolved horizon.
     stabs = [sc.lower(cfg, sc.as_scenario(f)) for f in spec.scenarios]
     n_windows = max(t["alive"].shape[0] for t in stabs)
-    stack = netsim.stack_envs(
-        [netsim.build_env(cfg, f, n_windows, tab=t)
-         for f, t in zip(spec.scenarios, stabs)])
-    cfg = netsim.resolve_horizon(cfg, tabs=stabs)
-    fidx = np.array([fi for _, _, fi, _ in pts], np.int32)
-    env_b = jax.tree.map(lambda x: x[fidx], stack)
     wl_pad = max(wlc.compile.n_windows(cfg, w) for w in spec.workloads)
+    lanes = len(pts)
+    if canonical:
+        n_windows = _canon_pow2(n_windows, CANONICAL_MIN_WINDOWS)
+        wl_pad = _canon_pow2(wl_pad, CANONICAL_MIN_WINDOWS)
+        lanes = CANONICAL_LANES
+    # stack host-side (numpy), not netsim.stack_envs (device): the lane
+    # gather below and the per-chunk slices in dispatch_sweep then cost
+    # nothing instead of compiling one gather program per leaf shape
+    stack = jax.tree.map(
+        lambda *xs: np.stack([np.asarray(x) for x in xs]),
+        *[netsim.build_env(cfg, f, n_windows, tab=t)
+          for f, t in zip(spec.scenarios, stabs)])
+    cfg = netsim.resolve_horizon(cfg, tabs=stabs, canonical=canonical)
+    # the stacks always hold every real point; ``lanes`` is the width of
+    # the compiled program (dispatch_sweep chunks the grid to fit)
+    lane_pts = pts
+    fidx = np.array([fi for _, _, fi, _ in lane_pts], np.int32)
+    env_b = jax.tree.map(lambda x: x[fidx], stack)
+    # the static workload mode is judged on the UNPADDED lowerings —
+    # canonical window padding must not kick a trivial (all-ones
+    # single-window) grid off the seed-identical fast path
+    mode = wlc.mode_of([wlc.lower(cfg, w) for w in spec.workloads])
     tabs = [wlc.lower(cfg, w, pad_windows=wl_pad) for w in spec.workloads]
-    mode = wlc.mode_of(tabs)
-    widx = np.array([wi for _, _, _, wi in pts], np.int32)
+    widx = np.array([wi for _, _, _, wi in lane_pts], np.int32)
     # win_start is host-side metadata (ragged across workloads); only the
-    # fixed-shape device tables ride into the compiled program
+    # fixed-shape device tables ride into the compiled program. All lane
+    # stacks stay host-side numpy so per-chunk slicing is free (device
+    # slicing would compile one gather program per leaf shape)
     dev = [{k: v for k, v in t.items() if k != "win_start"} for t in tabs]
-    wl_b = jax.tree.map(
-        lambda *xs: jnp.asarray(np.stack(xs))[widx], *dev)
+    wl_b = jax.tree.map(lambda *xs: np.stack(xs)[widx], *dev)
     # per-replica Poisson rate per tick, computed host-side in float64 so a
     # batched grid and a single run_sim see bit-identical inputs
-    rate_b = jnp.asarray(
-        np.array([r for r, _, _, _ in pts], np.float64)
-        * cfg.tick_ms / 1000.0 / cfg.n_replicas, jnp.float32)
-    seed_b = jnp.asarray([s for _, s, _, _ in pts], jnp.int32)
-    return pts, cfg, mode, env_b, wl_b, rate_b, seed_b
+    rate_b = (np.array([r for r, _, _, _ in lane_pts], np.float64)
+              * cfg.tick_ms / 1000.0 / cfg.n_replicas).astype(np.float32)
+    seed_b = np.array([s for _, s, _, _ in lane_pts], np.int32)
+    sig = ProgramSignature(
+        n=cfg.n_replicas, ticks=netsim.sim_ticks(cfg), lanes=lanes,
+        scen_windows=n_windows, wl_windows=wl_pad,
+        horizon=int(cfg.delay_horizon_ticks),
+        trivial=mode.trivial, closed=mode.closed)
+    return pts, cfg, mode, env_b, wl_b, rate_b, seed_b, sig
 
 
-def run_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec) -> List[Dict]:
-    """Run the whole grid; returns one result dict per point, in
-    ``spec.points()`` order. Scan protocols execute as a single vmapped
-    device dispatch; analytic baselines loop on the host."""
+class PendingSweep:
+    """A dispatched sweep whose device computation may still be running.
+    ``collect()`` blocks on the results and materializes the per-point
+    dicts. Dispatching several sweeps before collecting any (see
+    ``run_sweeps``) overlaps each program's device execution with the
+    next program's trace/lowering — on a warm persistent cache that
+    overlap is most of a fig suite's wall-clock."""
+
+    def __init__(self, protocol: str, *, results: List[Dict] = None,
+                 pts=None, wl_names=None, outs=None):
+        self.protocol = protocol
+        self._results = results   # analytic protocols resolve eagerly
+        self._pts = pts
+        self._wl_names = wl_names
+        self._outs = outs         # async device-array trees, one per chunk
+
+    def collect(self) -> List[Dict]:
+        if self._results is not None:
+            return self._results
+        t0 = time.perf_counter()
+        chunks = [jax.tree.map(np.asarray, o) for o in self._outs]
+        out = (chunks[0] if len(chunks) == 1 else
+               {k: np.concatenate([c[k] for c in chunks], axis=0)
+                for k in chunks[0]})
+        stats = _TIMING[self.protocol]
+        stats["run_s"] += time.perf_counter() - t0
+        self._outs = None
+        results: List[Dict] = []
+        for i, (rate, seed, fi, wi) in enumerate(self._pts):
+            r: Dict = {"protocol": self.protocol, "rate": rate,
+                       "seed": seed,
+                       "workload": self._wl_names[wi],
+                       "throughput": float(out["throughput"][i]),
+                       "median_ms": float(out["median_ms"][i]),
+                       "p99_ms": float(out["p99_ms"][i]),
+                       "committed": float(out["committed"][i]),
+                       "timeline": out["timeline"][i],
+                       "origin_median_ms": out["origin_median_ms"][i],
+                       "origin_p99_ms": out["origin_p99_ms"][i],
+                       "origin_timeline": out["origin_timeline"][i],
+                       "origin_lat_ms_timeline":
+                           out["origin_lat_ms_timeline"][i]}
+            if self.protocol == "mandator-sporades":
+                r["async_frac"] = float(out["async_frac"][i])
+                r["views"] = int(out["views"][i])
+                r["cvc_all"] = out["cvc_all"][i]
+                r["commit_key"] = out["commit_key"][i]
+            if "inflight_max" in out:
+                r["inflight_max"] = out["inflight_max"][i]
+            results.append(r)
+        self._results = results
+        return results
+
+
+def dispatch_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec,
+                   canonical: bool = True) -> PendingSweep:
+    """Lower + dispatch the grid without blocking on the device
+    computation. ``canonical`` pads the program to the canonical
+    signature (see ``_lower``) so shape-compatible sweeps share one
+    compiled program. Analytic baselines (host loops) resolve eagerly."""
     wl_names = [wlc.as_workload(w).name for w in spec.workloads]
     if protocol in ANALYTIC_PROTOCOLS:
         if protocol == "epaxos":
@@ -167,42 +392,64 @@ def run_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec) -> List[Dict]:
             r["seed"] = seed
             r["workload"] = wl_names[wi]
             out.append(r)
-        return out
+        return PendingSweep(protocol, results=out)
     if protocol not in harness.SCAN_PROTOCOLS:
         raise ValueError(protocol)
 
-    pts, cfg, mode, env_b, wl_b, rate_b, seed_b = _lower(cfg, spec)
+    compile_cache.ensure()
+    pts, cfg, mode, env_b, wl_b, rate_b, seed_b, sig = _lower(
+        cfg, spec, canonical=canonical)
+    _SIGNATURES.setdefault(protocol, set()).add(sig)
     traces_before = _TRACE_COUNTS.get(protocol, 0)
     t0 = time.perf_counter()
-    out = jax.tree.map(np.asarray, _sweep_compiled(
-        protocol, cfg, mode, env_b, wl_b, rate_b, seed_b))
+    if sig.lanes == len(pts):
+        chunks = [(env_b, wl_b, rate_b, seed_b)]
+    else:
+        # canonical: the grid runs as per-point async dispatches of the
+        # shared ``CANONICAL_LANES``-wide program (lanes are independent
+        # under vmap, so this is bitwise identical to one wide dispatch)
+        chunks = [(jax.tree.map(lambda x: x[i:i + 1], env_b),
+                   jax.tree.map(lambda x: x[i:i + 1], wl_b),
+                   rate_b[i:i + 1], seed_b[i:i + 1])
+                  for i in range(len(pts))]
+    fn = _sweep_compiled
+    if canonical:
+        # canonical programs additionally go through the on-disk program
+        # store: warm processes deserialize the traced computation instead
+        # of re-tracing it (the persistent XLA cache below then supplies
+        # the executable)
+        try:
+            prog = _acquire_program(protocol, cfg, mode, chunks[0])
+            fn = lambda _p, _c, _m, *a: prog(*a)  # noqa: E731
+        except Exception:
+            fn = _sweep_compiled  # fall back to plain jit
+    outs = [fn(protocol, cfg, mode, *c) for c in chunks]
     dt = time.perf_counter() - t0
     stats = _TIMING.setdefault(protocol, {
         "compile_s": 0.0, "run_s": 0.0, "dispatches": 0, "horizon": 0})
+    # dispatch returns before the device finishes: this bucket is pure
+    # trace + lower + (backend compile | cache load); collect() adds the
+    # execution + readback wall to run_s
     bucket = ("compile_s" if _TRACE_COUNTS.get(protocol, 0) > traces_before
               else "run_s")
     stats[bucket] += dt
     stats["dispatches"] += 1
     stats["horizon"] = int(cfg.delay_horizon_ticks)
-    results: List[Dict] = []
-    for i, (rate, seed, fi, wi) in enumerate(pts):
-        r: Dict = {"protocol": protocol, "rate": rate, "seed": seed,
-                   "workload": wl_names[wi],
-                   "throughput": float(out["throughput"][i]),
-                   "median_ms": float(out["median_ms"][i]),
-                   "p99_ms": float(out["p99_ms"][i]),
-                   "committed": float(out["committed"][i]),
-                   "timeline": out["timeline"][i],
-                   "origin_median_ms": out["origin_median_ms"][i],
-                   "origin_p99_ms": out["origin_p99_ms"][i],
-                   "origin_timeline": out["origin_timeline"][i],
-                   "origin_lat_ms_timeline": out["origin_lat_ms_timeline"][i]}
-        if protocol == "mandator-sporades":
-            r["async_frac"] = float(out["async_frac"][i])
-            r["views"] = int(out["views"][i])
-            r["cvc_all"] = out["cvc_all"][i]
-            r["commit_key"] = out["commit_key"][i]
-        if "inflight_max" in out:
-            r["inflight_max"] = out["inflight_max"][i]
-        results.append(r)
-    return results
+    return PendingSweep(protocol, pts=pts, wl_names=wl_names, outs=outs)
+
+
+def run_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec,
+              canonical: bool = True) -> List[Dict]:
+    """Run the whole grid; returns one result dict per point, in
+    ``spec.points()`` order. Scan protocols execute as a single vmapped
+    device dispatch; analytic baselines loop on the host."""
+    return dispatch_sweep(protocol, cfg, spec, canonical=canonical).collect()
+
+
+def run_sweeps(requests) -> List[List[Dict]]:
+    """Dispatch every (protocol, cfg, spec) request before collecting any,
+    so device execution overlaps host-side tracing/lowering of the later
+    programs. Returns per-request result lists in request order —
+    identical to ``[run_sweep(*r) for r in requests]``, just faster."""
+    pending = [dispatch_sweep(p, cfg, spec) for p, cfg, spec in requests]
+    return [p.collect() for p in pending]

@@ -237,11 +237,15 @@ def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
 
 
 def run_sim(protocol: str, cfg: SMRConfig, rate_tx_s: float,
-            scenario=None, seed: int = 0, workload=None) -> Dict:
+            scenario=None, seed: int = 0, workload=None,
+            canonical: bool = True) -> Dict:
     """Single-point wrapper over the batched engine (experiment.run_sweep).
     scenario: a repro.scenarios.Scenario (or None for fault-free).
-    workload: a repro.workloads.Workload (or None for the §5.2 baseline)."""
+    workload: a repro.workloads.Workload (or None for the §5.2 baseline).
+    ``canonical`` (default) pads to the canonical program signature, so
+    repeated single points — and the fig-suite sweeps — all reuse ONE
+    compiled program per protocol instead of compiling a B=1 variant."""
     from repro.core.experiment import SweepSpec, run_sweep
     spec = SweepSpec(rates=(float(rate_tx_s),), seeds=(int(seed),),
                      scenarios=(scenario,), workloads=(workload,))
-    return run_sweep(protocol, cfg, spec)[0]
+    return run_sweep(protocol, cfg, spec, canonical=canonical)[0]

@@ -54,6 +54,16 @@ def env_windows(cfg: SMRConfig, scenario) -> int:
 # in practice
 _HORIZON_MARGIN_TICKS = 16
 
+# Canonical ring-size floor for ``resolve_horizon(..., canonical=True)``:
+# the fig 6/7/9 suites (and everything at the paper's 5-replica WAN) all
+# resolve to exactly 256, so rounding smaller sweeps up to it merges their
+# otherwise-distinct 64/128-slot programs into the one canonical
+# (n, K, W, Dmax) signature per protocol. A larger ring never changes
+# results (it only adds slots past the sweep's true delay bound — pinned
+# by tests/test_scenarios.py), it only costs per-tick work, which is ~free
+# since the packed-ring substrate.
+CANONICAL_HORIZON = 256
+
 
 def _backlog_bound_ticks(cfg: SMRConfig, min_nic_scale: float) -> float:
     """Upper bound on NIC egress queueing delay (ticks). Batch formation is
@@ -73,7 +83,8 @@ def _backlog_bound_ticks(cfg: SMRConfig, min_nic_scale: float) -> float:
         bytes_per_tick * float(min_nic_scale))
 
 
-def resolve_horizon(cfg: SMRConfig, scenarios_=(), tabs=None) -> SMRConfig:
+def resolve_horizon(cfg: SMRConfig, scenarios_=(), tabs=None,
+                    canonical: bool = False) -> SMRConfig:
     """Resolve ``delay_horizon_ticks="auto"`` to the exact bound for a
     sweep: max static link delay + the largest scenario ``extra_delay`` +
     the NIC-backlog bound under the worst scenario throttle, next power of
@@ -84,7 +95,10 @@ def resolve_horizon(cfg: SMRConfig, scenarios_=(), tabs=None) -> SMRConfig:
     huge. Must be called with EVERY scenario of a sweep so all grid points
     share one ring shape (one compiled program); pass ``tabs`` (their
     pre-lowered, unpadded tables) to avoid re-lowering. No-op on int
-    horizons."""
+    horizons — a pinned ring is user intent, canonicalization only rounds
+    "auto". With ``canonical=True`` the resolved size is additionally
+    floored at ``CANONICAL_HORIZON`` so shape-compatible sweeps land on
+    the one canonical program signature per protocol."""
     if isinstance(cfg.delay_horizon_ticks, int):
         return cfg
     if cfg.delay_horizon_ticks != "auto":
@@ -104,6 +118,8 @@ def resolve_horizon(cfg: SMRConfig, scenarios_=(), tabs=None) -> SMRConfig:
              + _backlog_bound_ticks(cfg, min_scale) + _HORIZON_MARGIN_TICKS)
     bound = min(float(bound), float(sim_ticks(cfg) + 1))
     horizon = max(64, 1 << max(0, int(np.ceil(bound)) - 1).bit_length())
+    if canonical:
+        horizon = max(horizon, CANONICAL_HORIZON)
     return dataclasses.replace(cfg, delay_horizon_ticks=int(horizon))
 
 

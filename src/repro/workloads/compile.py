@@ -107,7 +107,10 @@ def lower(cfg: SMRConfig, wl, pad_windows: Optional[int] = None) -> Tables:
 
 def is_trivial(tab: Tables) -> bool:
     """True iff the lowered table is the seed-era baseline: open-loop,
-    single window, every origin at exactly its uniform share."""
+    single window, every origin at exactly its uniform share. Judge the
+    UNPADDED lowering: canonical-signature padding widens the window axis
+    without changing semantics, so the sweep engine decides the static
+    mode before padding (experiment._lower)."""
     return (float(tab["closed"]) == 0.0
             and tab["rate_of"].shape[0] == 1
             and bool(np.all(tab["rate_of"] == 1.0)))

@@ -1,6 +1,7 @@
 """Batched experiment engine (core/experiment.py): a vmapped sweep grid must
-compile exactly once per protocol and produce bitwise-identical metrics to
-the equivalent sequence of single run_sim calls (same seeds/scenarios)."""
+compile at most once per protocol (never per grid point) and produce
+bitwise-identical metrics to the equivalent sequence of single run_sim
+calls (same seeds/scenarios)."""
 import numpy as np
 import pytest
 
@@ -29,8 +30,11 @@ def test_grid_matches_sequential_run_sim(protocol):
     spec = SweepSpec(rates=(10_000, 20_000, 40_000), seeds=(0, 1))
     experiment.reset_trace_counts()
     grid = run_sweep(protocol, CFG, spec)
-    assert experiment.trace_counts()[protocol] == 1, \
-        "a whole grid must compile as ONE program"
+    # 0 = this shape's canonical program was already built earlier in the
+    # process (the program store shares it); the guarantee under test is
+    # that a grid NEVER builds one program per point
+    assert experiment.trace_counts().get(protocol, 0) <= 1, \
+        "a whole grid must compile as at most ONE program"
     assert len(grid) == spec.size == 6
     for r, (rate, seed, _, _) in zip(grid, spec.points()):
         assert (r["rate"], r["seed"]) == (rate, seed)
@@ -52,7 +56,7 @@ def test_scenario_variants_stack_into_one_program():
     spec = SweepSpec(rates=(20_000,), scenarios=scenarios)
     experiment.reset_trace_counts()
     grid = run_sweep("mandator-sporades", CFG, spec)
-    assert experiment.trace_counts()["mandator-sporades"] == 1
+    assert experiment.trace_counts().get("mandator-sporades", 0) <= 1
     for r, (rate, seed, fi, _) in zip(grid, spec.points()):
         single = run_sim("mandator-sporades", CFG, rate_tx_s=rate,
                          scenario=scenarios[fi], seed=seed)

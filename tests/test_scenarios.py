@@ -108,6 +108,51 @@ def test_auto_horizon_matches_seed_era_2048_end_to_end():
         np.testing.assert_array_equal(a["timeline"], b["timeline"])
 
 
+def test_canonical_signature_is_bitwise_inert():
+    """Property-style canonicalization pin: any sweep whose resolved
+    horizon fits the canonical Dmax yields byte-identical metrics whether
+    lowered at its native signature (exact lanes/windows/horizon) or the
+    canonical one (lanes, window tables, and horizon padded up). Cases
+    cover the padding axes separately: batch lanes (multi-rate baseline),
+    scenario windows (crash schedule), and both at once."""
+    cfg = SMRConfig(sim_seconds=0.5)
+    crash = Scenario("crash", (Crash(start_s=0.25, targets=(0,)),))
+    cases = (
+        ("mandator-sporades", SweepSpec(rates=(10_000, 30_000))),
+        ("mandator-sporades", SweepSpec(rates=(20_000,),
+                                        scenarios=(crash,))),
+        ("multipaxos", SweepSpec(rates=(10_000, 30_000),
+                                 scenarios=(None, crash))),
+    )
+    for proto, spec in cases:
+        native = run_sweep(proto, cfg, spec, canonical=False)
+        canon = run_sweep(proto, cfg, spec, canonical=True)
+        for a, b in zip(native, canon):
+            for k in ("throughput", "median_ms", "p99_ms", "committed"):
+                assert a[k] == b[k] or (np.isnan(a[k]) and np.isnan(b[k])), \
+                    (proto, k, a[k], b[k])
+            np.testing.assert_array_equal(a["timeline"], b["timeline"])
+            if proto == "mandator-sporades":
+                np.testing.assert_array_equal(a["cvc_all"], b["cvc_all"])
+
+
+def test_canonical_floor_only_rounds_auto_horizons():
+    """resolve_horizon(canonical=True) floors an auto horizon at the
+    canonical Dmax but never touches a pinned (int) horizon."""
+    import dataclasses
+    small = dataclasses.replace(CFG, sim_seconds=0.5)
+    auto = netsim.resolve_horizon(small, (None,), canonical=True)
+    assert auto.delay_horizon_ticks >= netsim.CANONICAL_HORIZON
+    pinned = dataclasses.replace(CFG, delay_horizon_ticks=64)
+    assert netsim.resolve_horizon(
+        pinned, (None,), canonical=True).delay_horizon_ticks == 64
+    # canonical never shrinks a larger-than-canonical auto bound
+    ddos = Scenario("ddos", (TargetedDelay(
+        delay_ms=800.0, targets="random-minority", repick_s=0.5, seed=7),))
+    big = netsim.resolve_horizon(CFG, (ddos,), canonical=True)
+    assert big.delay_horizon_ticks >= 1024
+
+
 # ------------------------------------------------------------- lowering ----
 
 def test_crash_interval_and_recover():
