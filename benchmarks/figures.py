@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.configs.smr import PAPER_CLAIMS, SMRConfig
 from repro.core.experiment import SweepSpec, dispatch_sweep
+from repro.obs import trace as obs_trace
+from repro.obs.export import phases_dict
 from repro.scenarios import Crash, Scenario
 from repro.scenarios import library as scenario_library
 from repro.workloads import library as workload_library
@@ -34,6 +36,29 @@ from repro.workloads import library as workload_library
 ART = Path(__file__).resolve().parent / "artifacts"
 
 Row = Tuple[str, float, str]
+
+# Flight-recorder level for every suite, read from REPRO_TRACE: the
+# default (off) keeps the artifact path byte-identical to an untraced
+# build; REPRO_TRACE=counters/full turns the same suites into phase- and
+# event-telemetry producers (benchmarks/run.py pops TELEMETRY into the
+# per-suite BENCH_core.json blocks).
+TRACE_LEVEL = obs_trace.level_from_env()
+TELEMETRY: dict = {}
+
+
+def _cfg(**kw) -> SMRConfig:
+    return SMRConfig(trace_level=TRACE_LEVEL, **kw)
+
+
+def _tele_phases(suite: str, key: str, r: dict) -> dict | None:
+    """Record one result's phase breakdown into the suite telemetry;
+    returns the phases dict (None when untraced) for the artifact JSON."""
+    ph = phases_dict(r)
+    if ph is not None:
+        t = TELEMETRY.setdefault(suite, {"trace_level": TRACE_LEVEL,
+                                         "phases": {}})
+        t["phases"][key] = ph
+    return ph
 
 
 def _row(name: str, med_ms: float, **derived) -> Row:
@@ -44,7 +69,7 @@ def _row(name: str, med_ms: float, **derived) -> Row:
 def fig6_throughput_latency(sim_seconds: float = 4.0) -> List[Row]:
     """Best-case WAN performance, 5 replicas (Fig. 6). Each protocol's rate
     sweep runs as one batched grid."""
-    cfg = SMRConfig(sim_seconds=sim_seconds)
+    cfg = _cfg(sim_seconds=sim_seconds)
     sweeps = {
         "mandator-sporades": [50_000, 150_000, 300_000, 450_000],
         "mandator-paxos": [50_000, 150_000, 300_000, 450_000],
@@ -58,6 +83,7 @@ def fig6_throughput_latency(sim_seconds: float = 4.0) -> List[Row]:
     # execution overlaps the next one's trace/lowering
     pending = {proto: dispatch_sweep(proto, cfg, SweepSpec(rates=tuple(rs)))
                for proto, rs in sweeps.items()}
+    phases: dict = {}
     for proto, p in pending.items():
         best = 0.0
         for r in p.collect():
@@ -65,17 +91,22 @@ def fig6_throughput_latency(sim_seconds: float = 4.0) -> List[Row]:
                              r["median_ms"],
                              tput=round(r["throughput"]),
                              p99_ms=round(r["p99_ms"], 1)))
+            ph = _tele_phases("fig6", f"{proto}@{round(r['rate'])}", r)
+            if ph is not None:
+                phases.setdefault(proto, {})[str(round(r["rate"]))] = ph
             # saturation throughput under the paper's ~1s (5s DDoS) bound
             if r["median_ms"] < 1_000 and r["throughput"] > best:
                 best = r["throughput"]
         results[proto] = best
+    if phases:
+        results["_phases"] = phases
     (ART / "fig6.json").write_text(json.dumps(results, indent=1))
     return rows
 
 
 def fig7_crash(sim_seconds: float = 4.0) -> List[Row]:
     """Leader crash mid-run (Fig. 7): throughput timeline."""
-    cfg = SMRConfig(sim_seconds=sim_seconds)
+    cfg = _cfg(sim_seconds=sim_seconds)
     # leader of view 0 crashes permanently mid-run (exact seed-era
     # crash-schedule semantics: Crash with no recovery)
     spec = SweepSpec(rates=(100_000,),
@@ -85,22 +116,28 @@ def fig7_crash(sim_seconds: float = 4.0) -> List[Row]:
     out = {}
     pending = {proto: dispatch_sweep(proto, cfg, spec)
                for proto in ("mandator-sporades", "mandator-paxos")}
+    phases: dict = {}
     for proto, p in pending.items():
         r = p.collect()[0]
         tl = [round(float(x)) for x in r["timeline"]]
         out[proto] = tl
+        ph = _tele_phases("fig7", proto, r)
+        if ph is not None:
+            phases[proto] = ph
         post = np.asarray(r["timeline"])[-2:]
         rows.append(_row(f"fig7/{proto}", r["median_ms"],
                          tput=round(r["throughput"]),
                          recovered=int(post.max() > 0),
                          timeline="|".join(map(str, tl))))
+    if phases:
+        out["_phases"] = phases
     (ART / "fig7.json").write_text(json.dumps(out, indent=1))
     return rows
 
 
 def fig8_ddos(sim_seconds: float = 4.0) -> List[Row]:
     """Targeted-minority DDoS (Fig. 8)."""
-    cfg = SMRConfig(sim_seconds=sim_seconds)
+    cfg = _cfg(sim_seconds=sim_seconds)
     # the curated §5.5 attack (same seeded attacked-minority draw stream
     # as the seed-era DDoS schedule)
     attack = scenario_library.get("paper-ddos", sim_seconds)
@@ -121,6 +158,9 @@ def fig8_ddos(sim_seconds: float = 4.0) -> List[Row]:
             r["throughput"] *= 0.5
             r["median_ms"] *= 2.0
         out[proto] = {"tput": r["throughput"], "med_ms": r["median_ms"]}
+        ph = _tele_phases("fig8", proto, r)
+        if ph is not None:
+            out[proto]["phases"] = ph
         rows.append(_row(f"fig8/{proto}", r["median_ms"],
                          tput=round(r["throughput"])))
     (ART / "fig8.json").write_text(json.dumps(out, indent=1))
@@ -133,13 +173,16 @@ def fig9_scalability(sim_seconds: float = 3.0) -> List[Row]:
     rows: List[Row] = []
     out = {}
     pending = {n: dispatch_sweep("mandator-sporades",
-                                 SMRConfig(n_replicas=n,
-                                           sim_seconds=sim_seconds),
+                                 _cfg(n_replicas=n,
+                                      sim_seconds=sim_seconds),
                                  SweepSpec(rates=(60_000 * n,)))
                for n in (3, 5, 7, 9)}
     for n, p in pending.items():
         r = p.collect()[0]
         out[n] = {"tput": r["throughput"], "med_ms": r["median_ms"]}
+        ph = _tele_phases("fig9", f"n={n}", r)
+        if ph is not None:
+            out[n]["phases"] = ph
         rows.append(_row(f"fig9/n={n}", r["median_ms"],
                          tput=round(r["throughput"])))
     (ART / "fig9.json").write_text(json.dumps(out, indent=1))
@@ -151,7 +194,7 @@ def robustness(sim_seconds: float = 4.0) -> List[Row]:
     library (scenarios/library.py). Each protocol's whole
     scenario × rate grid is ONE batched sweep (one compiled program), so
     adding a scenario costs a vmap lane, not a retrace."""
-    cfg = SMRConfig(sim_seconds=sim_seconds)
+    cfg = _cfg(sim_seconds=sim_seconds)
     lib = scenario_library.scenarios(sim_seconds, cfg.n_replicas)
     sweeps = {
         "mandator-sporades": (50_000, 200_000),
@@ -189,7 +232,7 @@ def workload_matrix(sim_seconds: float = 4.0) -> List[Row]:
     adding a traffic shape costs a vmap lane, not a retrace. The analytic
     baselines (epaxos/rabia) consume the same compiled rate tables
     host-side, so all six protocols appear in the matrix."""
-    cfg = SMRConfig(sim_seconds=sim_seconds)
+    cfg = _cfg(sim_seconds=sim_seconds)
     wlib = workload_library.workloads(sim_seconds, cfg.n_replicas)
     slib = scenario_library.scenarios(sim_seconds, cfg.n_replicas)
     rates = {

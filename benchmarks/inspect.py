@@ -1,0 +1,112 @@
+"""Flight-recorder inspector: run ONE traced sweep point, print its
+per-phase latency breakdown + event summary, and export a Chrome/Perfetto
+``trace_event`` JSON that loads directly at ui.perfetto.dev (or
+chrome://tracing):
+
+  PYTHONPATH=src python -m benchmarks.inspect \\
+      --protocol mandator-sporades --scenario paper-ddos \\
+      --rate 300000 --out trace.json
+
+The point runs at ``TraceLevel.FULL`` through the same batched experiment
+engine as every figure suite (one canonical compiled program per
+protocol — tracing levels compile their own variants, the default
+``off`` program is untouched). ``--level counters`` skips the event ring
+(phase table + event counts only, no trace file).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.smr import SMRConfig  # noqa: E402
+from repro.core import compile_cache  # noqa: E402
+from repro.core.experiment import SweepSpec, run_sweep  # noqa: E402
+from repro.core.harness import SCAN_PROTOCOLS  # noqa: E402
+from repro.obs import decode, export  # noqa: E402
+from repro.obs.trace import TraceLevel  # noqa: E402
+from repro.scenarios import library as scenario_library  # noqa: E402
+from repro.workloads import library as workload_library  # noqa: E402
+
+
+def inspect_point(protocol: str, rate: float, scenario: str = "",
+                  workload: str = "", sim_seconds: float = 4.0,
+                  seed: int = 0, level: str = TraceLevel.FULL,
+                  trace_events: int = 512, out: str = "trace.json") -> Path:
+    """Run + export one traced point; returns the trace path (or None at
+    ``counters`` level, which has no event ring to export)."""
+    cfg = SMRConfig(sim_seconds=sim_seconds, trace_level=level,
+                    trace_events=trace_events)
+    scen = scenario_library.get(scenario, sim_seconds, cfg.n_replicas) \
+        if scenario else None
+    wl = workload_library.get(workload, sim_seconds, cfg.n_replicas) \
+        if workload else None
+    spec = SweepSpec(rates=(rate,), seeds=(seed,), scenarios=(scen,),
+                     workloads=(wl,))
+    r = run_sweep(protocol, cfg, spec)[0]
+
+    print(f"== {protocol} @ {rate:,.0f} tx/s"
+          + (f" under {scenario!r}" if scenario else "")
+          + (f" with workload {workload!r}" if workload else "")
+          + f" ({sim_seconds:.0f}s sim, trace level {level}) ==")
+    print(f" throughput {r['throughput']:,.0f} tx/s, "
+          f"median {r['median_ms']:.0f} ms, p99 {r['p99_ms']:.0f} ms\n")
+    print(export.phase_table(r))
+
+    decoded = decode.decode_result(r)
+    if decoded:
+        print("\n cluster event counts (per protocol layer):")
+        for layer, counts in decode.event_summary(decoded).items():
+            cells = ", ".join(f"{k}={v}" for k, v in counts.items()) or "-"
+            dropped = sum(rep.get("dropped", 0) for rep in decoded[layer])
+            tail = f"  [ring dropped {dropped}]" if dropped else ""
+            print(f"   {layer:10s} {cells}{tail}")
+
+    if level != TraceLevel.FULL:
+        print("\n# no event ring at this level; rerun with --level full "
+              "for the Perfetto export")
+        return None
+    trace = export.chrome_trace(r, cfg, protocol, scenario=scen)
+    p = export.write(out, trace)
+    print(f"\n# wrote {p} ({len(trace['traceEvents'])} trace events) — "
+          "open at https://ui.perfetto.dev")
+    return p
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="run one traced sweep point and export a "
+                    "Chrome/Perfetto trace")
+    ap.add_argument("--protocol", default="mandator-sporades",
+                    choices=SCAN_PROTOCOLS)
+    ap.add_argument("--scenario", default="",
+                    help="adversary from the curated library: "
+                         f"{', '.join(scenario_library.NAMES)}")
+    ap.add_argument("--workload", default="",
+                    help="traffic shape from the curated library: "
+                         f"{', '.join(workload_library.NAMES)}")
+    ap.add_argument("--rate", type=float, default=300_000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sim-seconds", type=float, default=4.0)
+    ap.add_argument("--level", default=TraceLevel.FULL,
+                    choices=(TraceLevel.COUNTERS, TraceLevel.FULL))
+    ap.add_argument("--trace-events", type=int, default=512,
+                    help="per-replica event-ring capacity (oldest dropped)")
+    ap.add_argument("--out", default="trace.json")
+    ap.add_argument("--no-compile-cache", action="store_true")
+    args = ap.parse_args(argv)
+    if args.no_compile_cache:
+        compile_cache.disable()
+    else:
+        print(f"# persistent compile cache: {compile_cache.enable()}",
+              file=sys.stderr)
+    inspect_point(args.protocol, args.rate, scenario=args.scenario,
+                  workload=args.workload, sim_seconds=args.sim_seconds,
+                  seed=args.seed, level=args.level,
+                  trace_events=args.trace_events, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

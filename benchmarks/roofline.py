@@ -62,6 +62,48 @@ def rows(mesh: str = "single") -> List[Row]:
     return out
 
 
+def channel_hlo_block(dmax: int = 256, ticks: int = 200) -> dict:
+    """HLO cost + roofline terms of the packed-channel tick loop — the
+    exact program the ``channel`` microbench times. Lowered and compiled
+    in-process, the optimized HLO goes through the loop-aware
+    ``distributed/hlo_analysis.module_cost`` walker; XLA's own flat
+    ``cost_analysis()`` rides along as a cross-check (it counts the scan
+    body once, so its flops read ~``ticks``x low by design).
+    benchmarks/run.py drops this block into the channel suite's
+    BENCH_core.json entry."""
+    import jax
+
+    from benchmarks.bench_kernels import packed_loop_fn
+    from repro.distributed import hlo_analysis as ha
+
+    compiled = jax.jit(packed_loop_fn(dmax=dmax, ticks=ticks)
+                       ).lower().compile()
+    cost = ha.module_cost(compiled.as_text())
+    terms = ha.roofline_terms(cost["flops"], cost["bytes"],
+                              cost["collective_bytes"])
+    block = {
+        "dmax": dmax, "ticks": ticks,
+        "flops": float(cost["flops"]),
+        "hbm_bytes": float(cost["bytes"]),
+        "collective_bytes": float(cost["collective_bytes"]),
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": terms["dominant"],
+        "bound_s": terms["bound_s"],
+    }
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        block["xla_cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    except Exception:  # noqa: BLE001 — backend-dependent API, optional
+        pass
+    return block
+
+
 def summary(mesh: str = "single") -> dict:
     recs = [r for r in load(mesh) if "skipped" not in r]
     doms = {}

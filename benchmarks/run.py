@@ -43,12 +43,18 @@ from repro.core import compile_cache, experiment  # noqa: E402
 
 REPO = Path(__file__).resolve().parents[1]
 
+# per-suite extra BENCH_core blocks filled in by suite functions (the
+# channel suite's HLO/roofline analysis); merged into the suite entries
+_EXTRA: dict = {}
+
 
 def _channel_suite() -> list:
     rows = bench_channel()
     art = {r[0]: {"us_per_tick": r[1], "derived": r[2]} for r in rows}
     (figures.ART / "channel_bench.json").write_text(
         json.dumps(art, indent=1))
+    # HLO cost + roofline terms of the packed loop just timed above
+    _EXTRA["channel"] = {"hlo_roofline": roofline.channel_hlo_block()}
     return rows
 
 
@@ -152,6 +158,12 @@ def main() -> None:
                     if s.get("horizon")}
         if horizons:
             entry["ring_horizon"] = horizons
+        entry.update(_EXTRA.pop(name, {}))
+        # flight-recorder telemetry (phase breakdowns; only present when
+        # REPRO_TRACE != off, so default BENCH_core entries are unchanged)
+        tele = figures.TELEMETRY.pop(name, None)
+        if tele:
+            entry["telemetry"] = tele
         bench_core["suites"][name] = entry
         print(f"# {name} done in {wall:.2f}s "
               f"({entry['traces']} new traces, "

@@ -20,6 +20,14 @@ region by region; composes with --scenario:
   PYTHONPATH=src python examples/wan_consensus_demo.py --workload region-skew
   PYTHONPATH=src python examples/wan_consensus_demo.py \\
       --workload closed-loop --scenario paper-ddos
+
+Flight recorder — rerun any of the above with ``--trace out.json`` to get
+the per-phase latency breakdown (queue / dissemination / consensus /
+delivery) on stdout plus a Chrome/Perfetto trace of the
+Mandator-Sporades point, loadable at ui.perfetto.dev:
+
+  PYTHONPATH=src python examples/wan_consensus_demo.py \\
+      --trace ddos.json --scenario paper-ddos --rate 300000
 """
 import argparse
 import sys
@@ -122,6 +130,33 @@ def workload_showcase(wname: str, sname: str, sim_s: float,
                   f"{bucket_s * 1000:.0f}ms bucket")
 
 
+def traced_run(trace_path: str, sname: str, wname: str, sim_s: float,
+               rate: float) -> None:
+    """Flight-recorder view of one point (composes with --scenario /
+    --workload): per-phase latency tables for the Mandator protocols plus
+    a Perfetto trace of the Mandator-Sporades run."""
+    from repro.obs import export
+
+    cfg = SMRConfig(sim_seconds=sim_s, trace_level="full")
+    scen = library.get(sname, sim_s, cfg.n_replicas) if sname else None
+    wl = workload_library.get(wname, sim_s, cfg.n_replicas) if wname else None
+    print(f"== flight recorder @ {rate:,.0f} tx/s"
+          + (f", scenario {sname!r}" if sname else "")
+          + (f", workload {wname!r}" if wname else "")
+          + f" ({sim_s:.0f}s sim) ==")
+    spec = SweepSpec(rates=(rate,), scenarios=(scen,), workloads=(wl,))
+    for proto in ("mandator-sporades", "mandator-paxos"):
+        r = run_sweep(proto, cfg, spec)[0]
+        print(f"\n {proto}: {r['throughput']:,.0f} tx/s, "
+              f"median {r['median_ms']:.0f} ms")
+        print(export.phase_table(r))
+        if proto == "mandator-sporades":
+            p = export.write(trace_path,
+                             export.chrome_trace(r, cfg, proto,
+                                                 scenario=scen))
+            print(f"\n# wrote {p} — open at https://ui.perfetto.dev")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="",
@@ -132,6 +167,10 @@ def main() -> None:
                          "(composes with --scenario)")
     ap.add_argument("--sim-seconds", type=float, default=4.0)
     ap.add_argument("--rate", type=float, default=100_000)
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="run the flight recorder: write a Chrome/Perfetto "
+                         "trace of the (--scenario/--workload-composed) "
+                         "point here and print the per-phase latency table")
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="disable the persistent XLA compile cache "
                          "(the first demo run seeds it; repeat runs then "
@@ -142,7 +181,10 @@ def main() -> None:
     else:
         print(f"# persistent compile cache: {compile_cache.enable()}",
               file=sys.stderr)
-    if args.workload:
+    if args.trace:
+        traced_run(args.trace, args.scenario, args.workload,
+                   args.sim_seconds, args.rate)
+    elif args.workload:
         workload_showcase(args.workload, args.scenario, args.sim_seconds,
                           args.rate)
     elif args.scenario:

@@ -77,6 +77,14 @@ class SMRConfig:
     # "auto" = Pallas kernel on TPU, pure-jnp oracle elsewhere; also
     # "jnp"/"ref", "pallas", "pallas-interpret" (parity testing).
     channel_backend: str = "auto"
+    # Flight recorder (repro.obs): "off" (default — the compiled program
+    # is instruction-identical to an untraced build), "counters"
+    # (per-kind event counts only), or "full" (event rings + per-batch
+    # phase marks). Static: each level is its own compiled program.
+    trace_level: str = "off"
+    # Event-ring capacity per replica per layer at trace_level="full";
+    # overflow keeps the newest events and counts the dropped oldest.
+    trace_events: int = 512
 
     def delays_ms(self) -> np.ndarray:
         return one_way_delay_ms(self.n_replicas)

@@ -24,6 +24,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.configs.smr import SMRConfig
+from repro.obs.decode import host_phases
+from repro.obs.trace import TraceLevel
 from repro.workloads.analytic import (
     TableRate,
     closed_equilibrium_rate,
@@ -95,6 +97,12 @@ def _epaxos_once(cfg: SMRConfig, rate_tx_s: float,
     exec_prev = 0.0
     lat, wt = [], []
     committed = 0.0
+    # phase accounting (analytic twin of harness._phase_breakdown):
+    # queue = half the batch fill, consensus = the instance's commit
+    # round(s), delivery = the dependency-chain execution wait; EPaxos
+    # has no separate dissemination layer (batches ride inside PreAccept)
+    phases = {"queue": [], "consensus": [], "delivery": []} \
+        if cfg.trace_level != TraceLevel.OFF else None
     for create, commit, i, cnt, lam_t in events:
         e = max(commit + d_max[i], exec_prev + p_slow * d_avg)
         exec_prev = e
@@ -102,6 +110,10 @@ def _epaxos_once(cfg: SMRConfig, rate_tx_s: float,
             committed += cnt
             lat.append(e - create + batch / max(lam_t, 1e-9) / 2)
             wt.append(cnt)
+            if phases is not None:
+                phases["queue"].append(batch / max(lam_t, 1e-9) / 2)
+                phases["consensus"].append(commit - create)
+                phases["delivery"].append(e - commit)
     lat, wt = np.array(lat), np.array(wt)
     order = np.argsort(lat) if len(lat) else np.array([], int)
     med = p99 = float("nan")
@@ -114,7 +126,10 @@ def _epaxos_once(cfg: SMRConfig, rate_tx_s: float,
     for create, commit, i, cnt, _ in events:
         if commit < sim_ms:
             timeline[int(commit // 500)] += cnt
-    return {"protocol": "epaxos", "rate": rate_tx_s,
-            "throughput": committed / (sim_ms / 1000.0),
-            "median_ms": med, "p99_ms": p99, "committed": committed,
-            "timeline": timeline / 0.5}
+    out = {"protocol": "epaxos", "rate": rate_tx_s,
+           "throughput": committed / (sim_ms / 1000.0),
+           "median_ms": med, "p99_ms": p99, "committed": committed,
+           "timeline": timeline / 0.5}
+    if phases is not None:
+        out.update(host_phases(phases, wt))
+    return out

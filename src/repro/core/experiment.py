@@ -340,9 +340,10 @@ class PendingSweep:
             return self._results
         t0 = time.perf_counter()
         chunks = [jax.tree.map(np.asarray, o) for o in self._outs]
+        # tree-aware concat: with tracing on, sim_point outputs carry
+        # nested subtrees (per-layer obs rings), not just flat arrays
         out = (chunks[0] if len(chunks) == 1 else
-               {k: np.concatenate([c[k] for c in chunks], axis=0)
-                for k in chunks[0]})
+               jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *chunks))
         stats = _TIMING[self.protocol]
         stats["run_s"] += time.perf_counter() - t0
         self._outs = None
@@ -368,6 +369,15 @@ class PendingSweep:
                 r["commit_key"] = out["commit_key"][i]
             if "inflight_max" in out:
                 r["inflight_max"] = out["inflight_max"][i]
+            # flight-recorder outputs (absent at TraceLevel.OFF, so the
+            # default result schema is untouched)
+            for k in ("phase_med_ms", "phase_p99_ms", "phase_origin_med_ms",
+                      "phase_origin_p99_ms", "batch_marks_t", "batch_arr_t",
+                      "batch_n"):
+                if k in out:
+                    r[k] = out[k][i]
+            if "obs" in out:
+                r["obs"] = jax.tree.map(lambda x: x[i], out["obs"])
             results.append(r)
         self._results = results
         return results

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs.smr import SMRConfig
 from repro.core import mandator, netsim, paxos, sporades
+from repro.obs import trace as obs
 from repro.workloads.compile import TRIVIAL_MODE, WorkloadMode
 
 SCAN_PROTOCOLS = ("mandator-sporades", "mandator-paxos", "multipaxos",
@@ -115,6 +116,11 @@ def _scan_body(protocol: str, cfg: SMRConfig, n_ticks: int,
             carry["p"] = paxos.tick(carry["p"], t, key, env, cfg,
                                     rate_per_tick, True, lcr=lcr)
             out["cvc"] = jnp.max(carry["p"]["cvc"], axis=0)
+            if cfg.trace_level != obs.TraceLevel.OFF:
+                # each origin's OWN committed-VC observation — the
+                # delivery-phase boundary (sporades reads it off the
+                # cvc_all trace it already emits; off => compiled out)
+                out["cvc_own"] = jnp.diagonal(carry["p"]["cvc"])
         elif protocol == "multipaxos":
             carry = dict(carry)
             carry["p"] = paxos.tick(carry["p"], t, key, env, cfg,
@@ -233,6 +239,61 @@ def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
         out["commit_key"] = trace["commit_key"]    # [ticks, n]
     if mode.closed:
         out["inflight_max"] = jnp.max(trace["inflight"], axis=0)   # [n]
+    if cfg.trace_level != obs.TraceLevel.OFF:
+        out.update(_phase_breakdown(protocol, cfg, wl, trace, commit_t,
+                                    n_ticks))
+        rings = {layer: obs.public_view(st[k].get("tr"))
+                 for k, layer in (("m", "mandator"), ("s", "sporades"),
+                                  ("p", "paxos")) if k in st}
+        out["obs"] = {k: v for k, v in rings.items() if v is not None}
+    return out
+
+
+def _phase_breakdown(protocol: str, cfg: SMRConfig, wl: Dict, trace: Dict,
+                     commit_t: jax.Array, n_ticks: int,
+                     warmup_frac: float = 0.15) -> Dict:
+    """Latency-breakdown accounting (repro.obs.PHASES): split each
+    committed batch's end-to-end latency at three protocol boundaries —
+    batch creation at the origin (queue | dissemination), stability
+    (n-f dissemination votes; dissemination | consensus), and global
+    commit (consensus | delivery, the origin's own observation). The
+    four phase marks telescope back to the client-perceived latency of
+    ``_batch_metrics`` exactly (± nothing: same arrival mean, same
+    commit reconstruction), pinned by tests/test_obs.py."""
+    r_max = wl["batch_count"].shape[1]
+    create_t, arr_t = wl["batch_create_t"], wl["batch_arr_mean"]
+    cnt = wl["batch_count"]
+    if protocol == "mandator":
+        # dissemination IS the protocol: completion == commit == delivery
+        stable_t = deliv_t = commit_t
+    elif protocol in ("mandator-sporades", "mandator-paxos"):
+        # stability = the origin's own chain completing the round
+        stable_t = _vc_commit_ticks(trace["own_round"], r_max)
+        own_cvc = (jnp.diagonal(trace["cvc_all"], axis1=1, axis2=2)
+                   if protocol == "mandator-sporades" else trace["cvc_own"])
+        deliv_t = _vc_commit_ticks(own_cvc, r_max)
+    else:  # multipaxos: monolithic — the slot batch enters consensus as
+        # it forms, and commit is observed at the committing leader
+        stable_t = create_t
+        deliv_t = commit_t
+    marks = jnp.stack([create_t, stable_t, commit_t, deliv_t])  # [4, n, R]
+    prev = jnp.stack([arr_t, create_t, stable_t, commit_t])
+    phases_ms = jnp.maximum(marks - prev, 0.0) * cfg.tick_ms
+    ok = jnp.isfinite(marks).all(axis=0) & (cnt > 0)
+    in_win = ok & (commit_t >= warmup_frac * n_ticks)   # same window as
+    w = jnp.where(in_win, cnt, 0.0)                     # _batch_metrics
+    glob = jax.vmap(lambda v, q: _weighted_quantile(v.ravel(), w.ravel(), q),
+                    in_axes=(0, None))
+    origin = jax.vmap(jax.vmap(_weighted_quantile, in_axes=(0, 0, None)),
+                      in_axes=(0, None, None))
+    out = {"phase_med_ms": glob(phases_ms, 0.5),             # [4]
+           "phase_p99_ms": glob(phases_ms, 0.99),
+           "phase_origin_med_ms": origin(phases_ms, w, 0.5),  # [4, n]
+           "phase_origin_p99_ms": origin(phases_ms, w, 0.99)}
+    if cfg.trace_level == obs.TraceLevel.FULL:
+        out["batch_marks_t"] = marks      # absolute ticks, inf = never
+        out["batch_arr_t"] = arr_t
+        out["batch_n"] = cnt
     return out
 
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim, workload
+from repro.obs import trace as obs
 
 def ring_spec() -> ch.RingSpec:
     """Packed delivery ring: both message types in one fused buffer."""
@@ -36,7 +37,14 @@ def ring_spec() -> ch.RingSpec:
 def init_state(cfg: SMRConfig, n_ticks: int, closed: bool = False) -> Dict:
     n = cfg.n_replicas
     dmax = cfg.delay_horizon_ticks
+    # flight-recorder state rides in the protocol dict; None (and absent
+    # from the carry) at trace_level="off" so the untraced program is
+    # structurally identical to the pre-recorder build
+    tr = obs.init_trace(obs.DEFAULT_SPEC, cfg.trace_level, n,
+                        cfg.trace_events)
+    extra = {"tr": tr} if tr is not None else {}
     return {
+        **extra,
         "wl": workload.init_workload(cfg, n_ticks, closed=closed),
         "own_round": jnp.zeros((n,), jnp.int32),       # last completed round
         "formed_round": jnp.zeros((n,), jnp.int32),    # last formed round
@@ -119,6 +127,26 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
 
     ring = ch.ring_commit(spec, st["ring"], t, sends, drop=drop,
                           backend=cfg.channel_backend)
+
+    # ---- flight recorder (repro.obs; absent => compiled out) --------------
+    tr = st.get("tr")
+    if tr is not None:
+        es = obs.DEFAULT_SPEC
+        completed = own_round - st["own_round"]
+        done = completed > 0
+        tr = obs.record(es, tr, "batch_ack", done, t, a=own_round, b=quorum)
+        tr = obs.record(es, tr, "batch_stable", done, t, a=own_round,
+                        b=completed)
+        tr = obs.record(es, tr, "batch_create", formed, t, a=formed_round,
+                        b=count)
+        tr = obs.record(es, tr, "batch_disseminate", formed, t,
+                        a=formed_round, b=jnp.max(ser_delay, axis=1))
+        cut = jnp.sum(vote_mask & drop, axis=1) \
+            + jnp.sum(formed[:, None] & drop, axis=1)
+        tr = obs.record_env(es, tr, alive, t, a=own_round, b=formed_round,
+                            dropped_links=cut)
+        st["tr"] = tr
+
     st.update(wl=wl, own_round=own_round, formed_round=formed_round, lcr=lcr,
               seen_round=seen, vote_max=vote_max, ring=ring,
               egress_busy=busy)

@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim, workload
+from repro.obs import trace as obs
 
 def _phase1_ticks(cfg: SMRConfig) -> jnp.ndarray:
     """Majority RTT per prospective leader (modeled phase-1 cost)."""
@@ -53,7 +54,12 @@ def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool,
                closed: bool = False) -> Dict:
     n = cfg.n_replicas
     dmax = cfg.delay_horizon_ticks
+    # flight recorder: absent at trace_level="off" (see mandator.init_state)
+    tr = obs.init_trace(obs.DEFAULT_SPEC, cfg.trace_level, n,
+                        cfg.trace_events)
+    extra = {"tr": tr} if tr is not None else {}
     return {
+        **extra,
         "wl": workload.init_workload(cfg, n_ticks,
                                      closed=closed and not mandator_mode),
         "view": jnp.zeros((n,), jnp.int32),
@@ -197,6 +203,27 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
 
     ring = ch.ring_commit(spec, st["ring"], t, sends, drop=drop,
                           backend=cfg.channel_backend)
+
+    # ---- flight recorder (repro.obs; absent => compiled out) --------------
+    tr = st.get("tr")
+    if tr is not None:
+        es = obs.DEFAULT_SPEC
+        tr = obs.record(es, tr, "view_change", view != st["view"], t,
+                        a=view, b=slot)
+        tr = obs.record(es, tr, "leader_change", became_leader, t,
+                        a=view % n, b=view)
+        tr = obs.record(es, tr, "commit", commit, t, a=committed_slot,
+                        b=ack_cnt)
+        tr = obs.record(es, tr, "batch_create", formed, t, a=slot, b=count)
+        tr = obs.record(es, tr, "batch_disseminate", formed, t, a=slot,
+                        b=jnp.max(ser, axis=1))
+        sent_any = sends[0].mask
+        for s in sends[1:]:
+            sent_any = sent_any | s.mask
+        tr = obs.record_env(es, tr, alive, t, a=view, b=slot,
+                            dropped_links=jnp.sum(sent_any & drop, axis=1))
+        st["tr"] = tr
+
     st.update(wl=wl, view=view, last_heard=last_heard, ready_at=ready_at,
               slot=slot, outstanding=outstanding, acks=acks,
               committed_slot=committed_slot, cvc=cvc, slot_vc=slot_vc,

@@ -19,6 +19,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.configs.smr import SMRConfig
+from repro.obs.decode import host_phases
+from repro.obs.trace import HostTrace, TraceLevel
 from repro.workloads.analytic import (
     TableRate,
     closed_equilibrium_rate,
@@ -75,7 +77,16 @@ def _rabia_once(cfg: SMRConfig, rate_tx_s: float,
     lat, wt = [], []
     nbuck = int(np.ceil(sim_ms / 500.0))
     timeline = np.zeros(nbuck)
+    # flight recorder (host-side twin of repro.obs): one commit event per
+    # committed slot, one view_change per NULL (Ben-Or coin) round
+    tr = None if cfg.trace_level == TraceLevel.OFF else HostTrace()
+    # phase accounting (analytic twin of harness._phase_breakdown):
+    # dissemination = propagation to a majority, consensus = the slot
+    # wait + 2.5-RTT weak-MVC rounds (the remainder of the latency)
+    phases = {"dissemination": [], "consensus": []} if tr is not None \
+        else None
     ptr = 0
+    slot_idx = 0
     t_slot = slot_ms
     while t_slot < sim_ms and ptr < len(streams):
         create, origin, cnt = streams[ptr]
@@ -86,9 +97,20 @@ def _rabia_once(cfg: SMRConfig, rate_tx_s: float,
                 lat.append(t_end - create)
                 wt.append(cnt)
                 timeline[int(t_end // 500)] += cnt
+                if tr is not None:
+                    tr.record("commit", t_end / cfg.tick_ms, who=origin,
+                              key=slot_idx, total=cnt)
+                    diss = min(prop_ms[origin], t_end - create)
+                    phases["dissemination"].append(diss)
+                    phases["consensus"].append(t_end - create - diss)
             ptr += 1
-        # else: NULL slot (coin round commits nothing)
+        else:
+            # NULL slot (coin round commits nothing)
+            if tr is not None:
+                tr.record("view_change", t_slot / cfg.tick_ms,
+                          view=slot_idx, round=0)
         t_slot += slot_ms
+        slot_idx += 1
     lat, wt = np.array(lat), np.array(wt)
     med = p99 = float("nan")
     if len(lat):
@@ -96,7 +118,14 @@ def _rabia_once(cfg: SMRConfig, rate_tx_s: float,
         cum = np.cumsum(wt[order]) / wt.sum()
         med = float(lat[order][np.searchsorted(cum, 0.5)])
         p99 = float(lat[order][min(np.searchsorted(cum, 0.99), len(lat) - 1)])
-    return {"protocol": "rabia", "rate": rate_tx_s,
-            "throughput": committed / (sim_ms / 1000.0),
-            "median_ms": med, "p99_ms": p99, "committed": committed,
-            "timeline": timeline / 0.5}
+    out = {"protocol": "rabia", "rate": rate_tx_s,
+           "throughput": committed / (sim_ms / 1000.0),
+           "median_ms": med, "p99_ms": p99, "committed": committed,
+           "timeline": timeline / 0.5}
+    if tr is not None:
+        out["host_trace"] = {
+            "counts": tr.counts(),
+            "events": tr.events if cfg.trace_level == TraceLevel.FULL
+            else []}
+        out.update(host_phases(phases, wt))
+    return out

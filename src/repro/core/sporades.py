@@ -26,6 +26,7 @@ from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim
 from repro.core.coin import coin_table
+from repro.obs import trace as obs
 
 RS = 1 << 14                    # rounds-per-view bound (rank key packing)
 MAX_VIEWS = 4096
@@ -52,7 +53,12 @@ def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
     n = cfg.n_replicas
     dmax = cfg.delay_horizon_ticks
     z = lambda *s: jnp.zeros(s, jnp.int32)
+    # flight recorder: absent at trace_level="off" (see mandator.init_state)
+    tr = obs.init_trace(obs.DEFAULT_SPEC, cfg.trace_level, n,
+                        cfg.trace_events)
+    extra = {"tr": tr} if tr is not None else {}
     return {
+        **extra,
         "v_cur": z(n), "r_cur": z(n),
         "is_async": jnp.zeros((n,), jnp.bool_),
         "bh_key": z(n), "bh_vc": z(n, n),
@@ -328,6 +334,29 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
 
     ring = ch.ring_commit(spec, st["ring"], t, sends, drop=drop,
                           backend=cfg.channel_backend)
+
+    # ---- flight recorder (repro.obs; absent => compiled out) --------------
+    # st[...] still holds the tick-entry values here (locals were rebound,
+    # the dict is only updated below), so the masks are true transitions.
+    tr = st.get("tr")
+    if tr is not None:
+        es = obs.DEFAULT_SPEC
+        vchg = v_cur != st["v_cur"]
+        tr = obs.record(es, tr, "view_change", vchg, t, a=v_cur, b=r_cur)
+        tr = obs.record(es, tr, "leader_change", vchg, t,
+                        a=_leader_of(v_cur, n), b=v_cur)
+        # sync<->async transitions: a=1 entering the async path, 0 exiting
+        tr = obs.record(es, tr, "mode_switch", is_async != st["is_async"],
+                        t, a=is_async, b=v_cur)
+        tr = obs.record(es, tr, "commit", commit_key > st["commit_key"], t,
+                        a=commit_key, b=jnp.sum(cvc, axis=1))
+        sent_any = sends[0].mask
+        for s in sends[1:]:
+            sent_any = sent_any | s.mask
+        tr = obs.record_env(es, tr, alive, t, a=v_cur, b=r_cur,
+                            dropped_links=jnp.sum(sent_any & drop, axis=1))
+        st["tr"] = tr
+
     st.update(
         v_cur=v_cur, r_cur=r_cur, is_async=is_async, bh_key=bh_key,
         bh_vc=bh_vc.astype(jnp.int32), commit_key=commit_key,

@@ -1,0 +1,19 @@
+"""Protocol flight recorder (observability substrate).
+
+Three layers, consensus-agnostic:
+
+  - ``obs.trace``  — on-device event rings + counters, vmap-safe, carried
+    inside the protocol scan; statically gated by ``SMRConfig.trace_level``
+    so ``off`` (the default) compiles to the identical program;
+  - ``obs.decode`` — host-side ring -> per-replica event timelines;
+  - ``obs.export`` — Chrome/Perfetto ``trace_event`` JSON + the per-phase
+    latency table (``benchmarks/inspect.py`` and the demo's ``--trace``
+    drive both).
+
+See docs/ARCHITECTURE.md "Observability".
+"""
+from repro.obs import decode, export  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    DEFAULT_SPEC, FIELDS, PHASES, TRACE_ENV, HostTrace, TraceLevel,
+    TraceSpec, init_trace, level_from_env, public_view, record, record_env,
+)

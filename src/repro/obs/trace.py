@@ -1,0 +1,223 @@
+"""On-device protocol flight recorder: fixed-shape, vmap-safe event rings.
+
+Every scan protocol carries one trace state per layer (mandator /
+sporades / paxos) inside the ``jax.lax.scan`` carry, mirroring the
+``channel.RingSpec`` idiom: the event taxonomy is declared once as a
+``TraceSpec`` (declaration order = kind id), the ring is a fixed-shape
+int32 buffer ``[n, cap, 4]`` of (kind, tick, a, b) rows, and recording
+is a masked scatter — so a whole sweep grid vmaps the recorder exactly
+like it vmaps the channel rings.
+
+Gating is *static*: ``SMRConfig.trace_level`` is a frozen-dataclass field
+and cfg is a jit static argument, so at ``TraceLevel.OFF`` (the default)
+``init_trace`` returns None and every ``record`` call is a Python no-op —
+the traced computation is instruction-identical to an untraced build
+(tests/test_obs.py pins the outputs bitwise). ``COUNTERS`` keeps only the
+per-kind event counters; ``FULL`` adds the event ring.
+
+Overflow semantics: the ring keeps the **newest** ``cap`` events. The
+write slot is ``ptr % cap``, which is exactly the oldest live entry once
+``ptr >= cap`` — overwriting it drops the oldest event and bumps a
+saturating ``dropped`` counter (never corrupts, never wraps negative).
+``obs/decode.py`` unwraps the ring back into arrival order.
+
+Payloads are int32 throughout: sporades rank keys reach
+``MAX_VIEWS * RS = 2**26``, past float32's exact-integer range.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TraceLevel:
+    """Static trace gate. OFF compiles the recorder out entirely;
+    COUNTERS keeps per-kind event counts; FULL adds the event ring."""
+    OFF = "off"
+    COUNTERS = "counters"
+    FULL = "full"
+    ORDER = (OFF, COUNTERS, FULL)
+
+    @staticmethod
+    def check(level: str) -> str:
+        if level not in TraceLevel.ORDER:
+            raise ValueError(
+                f"trace_level {level!r}; expected one of {TraceLevel.ORDER}")
+        return level
+
+
+TRACE_ENV = "REPRO_TRACE"  # benchmarks read the level from the environment
+
+
+def level_from_env(default: str = TraceLevel.OFF) -> str:
+    """Trace level from ``REPRO_TRACE`` (off/counters/full); benchmarks use
+    this so the default artifact path stays byte-identical to an untraced
+    build while ``REPRO_TRACE=full`` turns the same suites into trace
+    producers."""
+    return TraceLevel.check(os.environ.get(TRACE_ENV, default))
+
+
+class TraceSpec:
+    """The event taxonomy: a tuple of (name, (arg_a, arg_b)) pairs.
+    Declaration order is the on-device kind id, exactly like
+    ``channel.RingSpec`` derives field offsets from declaration order."""
+
+    def __init__(self, *events: Tuple[str, Tuple[str, str]]):
+        self.events = tuple(events)
+        self.names = tuple(name for name, _ in events)
+        self._kind = {name: i for i, (name, _) in enumerate(events)}
+        if len(self._kind) != len(events):
+            raise ValueError("duplicate event names")
+
+    @property
+    def n_kinds(self) -> int:
+        return len(self.events)
+
+    def kind(self, name: str) -> int:
+        return self._kind[name]
+
+    def args_of(self, name_or_kind) -> Tuple[str, str]:
+        if isinstance(name_or_kind, str):
+            return self.events[self._kind[name_or_kind]][1]
+        return self.events[int(name_or_kind)][1]
+
+
+# One shared taxonomy for every protocol layer; a layer records the subset
+# that exists in its state machine (e.g. multipaxos never mode-switches).
+DEFAULT_SPEC = TraceSpec(
+    ("view_change", ("view", "round")),       # consensus view/round advance
+    ("mode_switch", ("is_async", "view")),    # sporades sync<->async
+    ("leader_change", ("leader", "view")),
+    ("batch_create", ("round", "count")),     # round/slot formed
+    ("batch_disseminate", ("round", "egress_ticks")),
+    ("batch_ack", ("round", "quorum")),       # quorum of votes reached
+    ("batch_stable", ("round", "completed")),  # completion (stable) point
+    ("commit", ("key", "total")),             # ordered/committed
+    ("crash", ("view", "round")),             # alive -> down transition
+    ("recover", ("view", "round")),           # down -> alive transition
+    ("drop", ("links", "view")),              # sends cut by partition/drop
+)
+
+# Event-ring record fields, in buffer order (buf[..., i]).
+FIELDS = ("kind", "tick", "a", "b")
+
+# Latency-breakdown phases (harness.sim_point), in output order: a
+# committed batch's end-to-end latency = queue (client arrival -> batch
+# create at the origin) + dissemination (create -> n-f votes / stable) +
+# consensus (stable -> ordered anywhere) + delivery (ordered -> the
+# origin itself observes the commit).
+PHASES = ("queue", "dissemination", "consensus", "delivery")
+
+_SAT = np.int32(2**31 - 1)  # saturation bound of the dropped counter
+
+
+def init_trace(spec: TraceSpec, level: str, n: int,
+               cap: int) -> Optional[Dict[str, jax.Array]]:
+    """Per-layer trace state, or None at TraceLevel.OFF (so carrying it in
+    protocol state dicts is structurally free when tracing is off)."""
+    TraceLevel.check(level)
+    if level == TraceLevel.OFF:
+        return None
+    ts = {
+        "counts": jnp.zeros((n, spec.n_kinds), jnp.int32),
+        # crash/recover edge detection (netsim.alive is the level signal)
+        "prev_alive": jnp.ones((n,), jnp.bool_),
+    }
+    if level == TraceLevel.FULL:
+        if cap < 1:
+            raise ValueError(f"trace_events must be >= 1, got {cap}")
+        ts["buf"] = jnp.zeros((n, cap, len(FIELDS)), jnp.int32)
+        ts["ptr"] = jnp.zeros((n,), jnp.int32)
+        ts["dropped"] = jnp.zeros((n,), jnp.int32)
+    return ts
+
+
+def _bcast_i32(x, n: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.asarray(x).astype(jnp.int32), (n,))
+
+
+def record(spec: TraceSpec, ts: Optional[Dict], name: str, mask: jax.Array,
+           t: jax.Array, a=0, b=0) -> Optional[Dict]:
+    """Record event ``name`` for every replica where ``mask`` is set, with
+    int payloads ``a``/``b`` (scalars or [n] arrays; floats are cast).
+    None trace state (level off) passes straight through, so call sites
+    need no level branching of their own."""
+    if ts is None:
+        return None
+    kind = spec.kind(name)
+    n = ts["counts"].shape[0]
+    mask = jnp.asarray(mask, jnp.bool_)
+    inc = mask.astype(jnp.int32)
+    ts = dict(ts)
+    ts["counts"] = ts["counts"].at[:, kind].add(inc)
+    if "buf" in ts:
+        cap = ts["buf"].shape[1]
+        rows = jnp.arange(n)
+        slot = ts["ptr"] % cap  # == the oldest live entry once ptr >= cap
+        rec = jnp.stack([jnp.full((n,), kind, jnp.int32), _bcast_i32(t, n),
+                         _bcast_i32(a, n), _bcast_i32(b, n)], axis=-1)
+        cur = ts["buf"][rows, slot]
+        ts["buf"] = ts["buf"].at[rows, slot].set(
+            jnp.where(mask[:, None], rec, cur))
+        drop_inc = inc * (ts["ptr"] >= cap)
+        ts["ptr"] = ts["ptr"] + inc
+        ts["dropped"] = jnp.where(ts["dropped"] >= _SAT, _SAT,
+                                  ts["dropped"] + drop_inc)
+    return ts
+
+
+def record_env(spec: TraceSpec, ts: Optional[Dict], alive: jax.Array,
+               t: jax.Array, a=0, b=0,
+               dropped_links: Optional[jax.Array] = None) -> Optional[Dict]:
+    """Environment-driven events shared by every protocol layer:
+    crash/recover edges of ``netsim.alive`` and sends cut by link drops
+    this tick (``dropped_links``: per-sender count)."""
+    if ts is None:
+        return None
+    alive = jnp.asarray(alive, jnp.bool_)
+    prev = ts["prev_alive"]
+    ts = record(spec, ts, "crash", prev & ~alive, t, a=a, b=b)
+    ts = record(spec, ts, "recover", ~prev & alive, t, a=a, b=b)
+    if dropped_links is not None:
+        ts = record(spec, ts, "drop", dropped_links > 0, t,
+                    a=dropped_links, b=a)
+    ts = dict(ts)
+    ts["prev_alive"] = alive
+    return ts
+
+
+class HostTrace:
+    """Host-side sibling of the device ring, for the pure-numpy paths
+    (the analytic rabia slot loop, the runtime/*_rt.py control-plane
+    drivers): same event taxonomy, plain-list storage, no capacity
+    games. ``events`` is already in arrival order."""
+
+    def __init__(self, spec: TraceSpec = DEFAULT_SPEC):
+        self.spec = spec
+        self.events: list = []
+
+    def record(self, name: str, tick, who: int = 0, **args) -> None:
+        self.spec.kind(name)  # unknown names fail fast, like the ring
+        self.events.append({"name": name, "tick": float(tick),
+                            "who": int(who),
+                            "args": {k: (float(v) if isinstance(v, float)
+                                         else int(v))
+                                     for k, v in args.items()}})
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.events:
+            out[e["name"]] = out.get(e["name"], 0) + 1
+        return out
+
+
+def public_view(ts: Optional[Dict]) -> Optional[Dict]:
+    """The trace leaves worth surfacing out of the scan (everything but
+    the edge-detector scratch)."""
+    if ts is None:
+        return None
+    return {k: v for k, v in ts.items() if k != "prev_alive"}

@@ -14,6 +14,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.trace import HostTrace
+
 
 @dataclass
 class PodState:
@@ -40,6 +42,8 @@ class MandatorRuntime:
         self.f = (n_pods - 1) // 2
         self.pods = [PodState(i, n_pods) for i in range(n_pods)]
         self.drop = np.zeros((n_pods, n_pods), bool)   # drop[i, j]: i->j lost
+        # flight recorder (host-side twin of repro.obs, same taxonomy)
+        self.trace = HostTrace()
 
     # ---- Algorithm 1 ------------------------------------------------------
     def write(self, pod: int, payload_ready: bool = True) -> Optional[int]:
@@ -51,6 +55,7 @@ class MandatorRuntime:
         r = p.own_round + 1
         p.awaiting = True
         p.votes[r] = set()
+        self.trace.record("batch_create", r, who=pod, round=r, count=1)
         for j in range(self.n):
             if not self.drop[pod, j]:
                 self._deliver_batch(pod, j, r)
@@ -70,6 +75,8 @@ class MandatorRuntime:
             p.own_round = r
             p.awaiting = False
             p.lcr[owner] = r
+            self.trace.record("batch_stable", r, who=owner, round=r,
+                              completed=1)
 
     # ---- consensus payload -------------------------------------------------
     def get_client_requests(self, pod: int) -> np.ndarray:

@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.coin import common_coin_flip
+from repro.obs.trace import HostTrace
 
 
 @dataclass
@@ -53,6 +54,8 @@ class SporadesRuntime:
         self.ctl = [ControllerState(i) for i in range(n_pods)]
         self.view = 0
         self.round = 0
+        # flight recorder (host-side twin of repro.obs, same taxonomy)
+        self.trace = HostTrace()
 
     # ---- liveness predicates ----------------------------------------------
     def _responsive(self) -> List[int]:
@@ -76,26 +79,40 @@ class SporadesRuntime:
             cut = cuts[ldr]
             rec = CommitRecord(self.view, self.round + 1, cut.copy(), "sync")
             self._apply(rec, resp)
+            self.trace.record("commit", rec.round, who=ldr,
+                              key=rec.view, total=len(resp))
             return rec
         # ---- timeout -> asynchronous fallback ------------------------------
+        self.trace.record("mode_switch", self.round, who=ldr,
+                          is_async=1, view=self.view)
         live = [i for i in self._live() if i in cuts]
         if len(live) < self.n - self.f:
             return None                                  # no quorum at all
         # two-height exchange happens among `live`; the common coin elects
         view = self.view + 1
         elected = int(common_coin_flip(view, self.n, self.seed))
+        self.trace.record("leader_change", self.round, who=elected,
+                          leader=elected, view=view)
         # the elected block commits iff its controller completed height 2 —
         # i.e. it is among the live quorum ("first n-f async-complete")
         if elected in live:
             cut = cuts[elected]
             rec = CommitRecord(view, self.round + 1, cut.copy(), "async")
             self.view = view + 1
+            self.trace.record("view_change", rec.round,
+                              view=self.view, round=rec.round)
+            self.trace.record("mode_switch", rec.round, who=elected,
+                              is_async=0, view=self.view)
             self._apply(rec, live)
+            self.trace.record("commit", rec.round, who=elected,
+                              key=rec.view, total=len(live))
             return rec
         # coin landed on a dead/straggling pod: adopt its height-1 block if
         # seen (Bfall) — here: no commit this round, advance the view
         self.view = view + 1
         self.round += 1
+        self.trace.record("view_change", self.round, view=self.view,
+                          round=self.round)
         return None
 
     def _apply(self, rec: CommitRecord, voters: List[int]) -> None:
@@ -109,9 +126,13 @@ class SporadesRuntime:
     # ---- failure injection ---------------------------------------------------
     def crash(self, pod: int) -> None:
         self.ctl[pod].alive = False
+        self.trace.record("crash", self.round, who=pod,
+                          view=self.view, round=self.round)
 
     def recover(self, pod: int) -> None:
         self.ctl[pod].alive = True
+        self.trace.record("recover", self.round, who=pod,
+                          view=self.view, round=self.round)
 
     def set_straggler(self, pod: int, straggling: bool = True) -> None:
         self.ctl[pod].straggling = straggling
