@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.configs.smr import PAPER_CLAIMS, SMRConfig
 from repro.core.experiment import SweepSpec, dispatch_sweep
+from repro.obs import monitor as obs_monitor
 from repro.obs import trace as obs_trace
 from repro.obs.export import phases_dict
 from repro.scenarios import Crash, Scenario
@@ -45,9 +46,18 @@ Row = Tuple[str, float, str]
 TRACE_LEVEL = obs_trace.level_from_env()
 TELEMETRY: dict = {}
 
+# Health-monitor level for every suite, read from REPRO_MONITOR: off (the
+# default) keeps the artifact path byte-identical; gauges/full turn every
+# sweep into an invariant-checked run whose per-suite verdicts
+# (benchmarks/run.py pops VERDICTS into BENCH_core.json and the
+# BENCH_history.jsonl ledger) gate CI.
+MONITOR_LEVEL = obs_monitor.level_from_env()
+VERDICTS: dict = {}
+
 
 def _cfg(**kw) -> SMRConfig:
-    return SMRConfig(trace_level=TRACE_LEVEL, **kw)
+    return SMRConfig(trace_level=TRACE_LEVEL,
+                     monitor_level=MONITOR_LEVEL, **kw)
 
 
 def _tele_phases(suite: str, key: str, r: dict) -> dict | None:
@@ -59,6 +69,21 @@ def _tele_phases(suite: str, key: str, r: dict) -> dict | None:
                                          "phases": {}})
         t["phases"][key] = ph
     return ph
+
+
+def _tele_monitor(suite: str, key: str, r: dict) -> dict | None:
+    """Fold one result's monitor verdict into the suite-level verdict;
+    returns the point verdict (None when the monitor is off)."""
+    v = obs_monitor.verdict(r)
+    if v is None:
+        return None
+    agg = VERDICTS.setdefault(suite, {"level": v["level"], "ok": True,
+                                      "points": 0, "violations": {}})
+    agg["points"] += 1
+    agg["ok"] = agg["ok"] and v["ok"]
+    for k, c in v["violations"].items():
+        agg["violations"][k] = agg["violations"].get(k, 0) + c
+    return v
 
 
 def _row(name: str, med_ms: float, **derived) -> Row:
@@ -94,6 +119,7 @@ def fig6_throughput_latency(sim_seconds: float = 4.0) -> List[Row]:
             ph = _tele_phases("fig6", f"{proto}@{round(r['rate'])}", r)
             if ph is not None:
                 phases.setdefault(proto, {})[str(round(r["rate"]))] = ph
+            _tele_monitor("fig6", f"{proto}@{round(r['rate'])}", r)
             # saturation throughput under the paper's ~1s (5s DDoS) bound
             if r["median_ms"] < 1_000 and r["throughput"] > best:
                 best = r["throughput"]
@@ -124,6 +150,7 @@ def fig7_crash(sim_seconds: float = 4.0) -> List[Row]:
         ph = _tele_phases("fig7", proto, r)
         if ph is not None:
             phases[proto] = ph
+        _tele_monitor("fig7", proto, r)
         post = np.asarray(r["timeline"])[-2:]
         rows.append(_row(f"fig7/{proto}", r["median_ms"],
                          tput=round(r["throughput"]),
@@ -161,6 +188,7 @@ def fig8_ddos(sim_seconds: float = 4.0) -> List[Row]:
         ph = _tele_phases("fig8", proto, r)
         if ph is not None:
             out[proto]["phases"] = ph
+        _tele_monitor("fig8", proto, r)
         rows.append(_row(f"fig8/{proto}", r["median_ms"],
                          tput=round(r["throughput"])))
     (ART / "fig8.json").write_text(json.dumps(out, indent=1))
@@ -183,6 +211,7 @@ def fig9_scalability(sim_seconds: float = 3.0) -> List[Row]:
         ph = _tele_phases("fig9", f"n={n}", r)
         if ph is not None:
             out[n]["phases"] = ph
+        _tele_monitor("fig9", f"n={n}", r)
         rows.append(_row(f"fig9/n={n}", r["median_ms"],
                          tput=round(r["throughput"])))
     (ART / "fig9.json").write_text(json.dumps(out, indent=1))
@@ -214,10 +243,16 @@ def robustness(sim_seconds: float = 4.0) -> List[Row]:
         for r, (rate, _, fi, _) in zip(pending[proto].collect(),
                                        spec.points()):
             scen = names[fi]
-            matrix[proto][scen][str(round(rate))] = {
+            cell = {
                 "tput": fin(r["throughput"]), "med_ms": fin(r["median_ms"]),
                 "p99_ms": fin(r["p99_ms"]), "committed": fin(r["committed"]),
             }
+            mv = _tele_monitor("robustness", f"{proto}@{round(rate)}/{scen}",
+                               r)
+            if mv is not None:
+                cell["monitor"] = {"ok": mv["ok"],
+                                   "violations": mv["violations"]}
+            matrix[proto][scen][str(round(rate))] = cell
             rows.append(_row(f"robustness/{proto}@{round(rate)}/{scen}",
                              r["median_ms"], tput=round(r["throughput"]),
                              committed=round(r["committed"])))
@@ -272,6 +307,10 @@ def workload_matrix(sim_seconds: float = 4.0) -> List[Row]:
                                          for x in r["origin_median_ms"]]
             if "inflight_max" in r:
                 cell["inflight_max"] = [fin(x) for x in r["inflight_max"]]
+            mv = _tele_monitor("workloads", f"{proto}/{wname}/{sname}", r)
+            if mv is not None:
+                cell["monitor"] = {"ok": mv["ok"],
+                                   "violations": mv["violations"]}
             matrix[proto][wname][sname] = cell
             rows.append(_row(f"workloads/{proto}/{wname}/{sname}",
                              r["median_ms"], tput=round(r["throughput"]),

@@ -26,6 +26,7 @@ from repro.core import compile_cache  # noqa: E402
 from repro.core.experiment import SweepSpec, run_sweep  # noqa: E402
 from repro.core.harness import SCAN_PROTOCOLS  # noqa: E402
 from repro.obs import decode, export  # noqa: E402
+from repro.obs import monitor as obs_monitor  # noqa: E402
 from repro.obs.trace import TraceLevel  # noqa: E402
 from repro.scenarios import library as scenario_library  # noqa: E402
 from repro.workloads import library as workload_library  # noqa: E402
@@ -34,11 +35,16 @@ from repro.workloads import library as workload_library  # noqa: E402
 def inspect_point(protocol: str, rate: float, scenario: str = "",
                   workload: str = "", sim_seconds: float = 4.0,
                   seed: int = 0, level: str = TraceLevel.FULL,
-                  trace_events: int = 512, out: str = "trace.json") -> Path:
+                  trace_events: int = 512, out: str = "trace.json",
+                  health: bool = False) -> Path:
     """Run + export one traced point; returns the trace path (or None at
-    ``counters`` level, which has no event ring to export)."""
+    ``counters`` level, which has no event ring to export). ``health``
+    additionally runs the on-device invariant monitor at full level and
+    prints the verdict + per-replica gauge table."""
     cfg = SMRConfig(sim_seconds=sim_seconds, trace_level=level,
-                    trace_events=trace_events)
+                    trace_events=trace_events,
+                    monitor_level=obs_monitor.MonitorLevel.FULL
+                    if health else obs_monitor.MonitorLevel.OFF)
     scen = scenario_library.get(scenario, sim_seconds, cfg.n_replicas) \
         if scenario else None
     wl = workload_library.get(workload, sim_seconds, cfg.n_replicas) \
@@ -54,6 +60,10 @@ def inspect_point(protocol: str, rate: float, scenario: str = "",
     print(f" throughput {r['throughput']:,.0f} tx/s, "
           f"median {r['median_ms']:.0f} ms, p99 {r['p99_ms']:.0f} ms\n")
     print(export.phase_table(r))
+
+    if health:
+        print()
+        print(obs_monitor.health_table(r))
 
     decoded = decode.decode_result(r)
     if decoded:
@@ -95,6 +105,10 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-events", type=int, default=512,
                     help="per-replica event-ring capacity (oldest dropped)")
     ap.add_argument("--out", default="trace.json")
+    ap.add_argument("--health", action="store_true",
+                    help="run the consensus health monitor at full level "
+                         "and print the invariant verdict + gauge table "
+                         "(composes with --scenario/--workload)")
     ap.add_argument("--no-compile-cache", action="store_true")
     args = ap.parse_args(argv)
     if args.no_compile_cache:
@@ -105,7 +119,8 @@ def main(argv=None) -> None:
     inspect_point(args.protocol, args.rate, scenario=args.scenario,
                   workload=args.workload, sim_seconds=args.sim_seconds,
                   seed=args.seed, level=args.level,
-                  trace_events=args.trace_events, out=args.out)
+                  trace_events=args.trace_events, out=args.out,
+                  health=args.health)
 
 
 if __name__ == "__main__":

@@ -40,6 +40,8 @@ from benchmarks import roofline  # noqa: E402
 from benchmarks.bench_kernels import bench as kernel_bench  # noqa: E402
 from benchmarks.bench_kernels import bench_channel  # noqa: E402
 from repro.core import compile_cache, experiment  # noqa: E402
+from repro.obs import history  # noqa: E402
+from repro.obs import monitor as obs_monitor  # noqa: E402
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -69,6 +71,9 @@ def main() -> None:
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="disable the persistent XLA compilation cache "
                          "(every process recompiles)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history.jsonl append + "
+                         "regression comparison")
     args, _ = ap.parse_known_args()
     sim_s = 2.0 if args.quick else 4.0
     only = set(args.only.split(",")) if args.only else None
@@ -164,14 +169,24 @@ def main() -> None:
         tele = figures.TELEMETRY.pop(name, None)
         if tele:
             entry["telemetry"] = tele
+        # health-monitor verdict (only present when REPRO_MONITOR != off):
+        # aggregated over every sweep point the suite collected
+        mverdict = figures.VERDICTS.pop(name, None)
+        if mverdict is not None:
+            entry["monitor"] = mverdict
         bench_core["suites"][name] = entry
-        print(f"# {name} done in {wall:.2f}s "
-              f"({entry['traces']} new traces, "
-              f"{entry['cache_misses']} compile-cache misses)",
-              file=sys.stderr)
+        msg = (f"# {name} done in {wall:.2f}s "
+               f"({entry['traces']} new traces, "
+               f"{entry['cache_misses']} compile-cache misses")
+        if mverdict is not None:
+            msg += f", {obs_monitor.format_verdict(mverdict)}"
+        print(msg + ")", file=sys.stderr)
     # distinct canonical programs per protocol, across every suite run
     bench_core["programs"] = {
         p: len(s) for p, s in experiment.program_signatures().items()}
+    # history entry covers THIS run's suites only — snapshot before the
+    # merge below folds in stale suites from a previous BENCH_core.json
+    run_suites = {n: dict(e) for n, e in bench_core["suites"].items()}
     # merge into the tracked trajectory file: partial (--only) runs update
     # just the suites they ran instead of discarding the rest
     bench_path = REPO / "BENCH_core.json"
@@ -184,6 +199,19 @@ def main() -> None:
         except (json.JSONDecodeError, AttributeError):
             pass
     bench_path.write_text(json.dumps(bench_core, indent=1) + "\n")
+    if run_suites and not args.no_history:
+        # append-and-compare ledger: every run lands one schema-validated
+        # line in BENCH_history.jsonl; the comparison against the previous
+        # entry is what the CI health job gates on
+        hist_path = REPO / "BENCH_history.jsonl"
+        base = history.latest(hist_path)
+        entry = history.make_entry(run_suites, quick=args.quick,
+                                   git_sha=history.git_sha(REPO),
+                                   timestamp=time.time())
+        history.append(hist_path, entry)
+        cmp_res = history.compare(base, entry)
+        for line in history.format_compare(cmp_res):
+            print(f"# history: {line}", file=sys.stderr)
     roofline.main()
     if errored:
         sys.exit(f"suite(s) errored: {', '.join(errored)}")

@@ -85,6 +85,17 @@ class SMRConfig:
     # Event-ring capacity per replica per layer at trace_level="full";
     # overflow keeps the newest events and counts the dropped oldest.
     trace_events: int = 512
+    # Consensus health monitor (repro.obs.monitor): "off" (default — the
+    # compiled program is instruction-identical to an unmonitored build,
+    # exactly like trace_level), "gauges" (resource gauges only: ring
+    # occupancy, dropped sends, inflight high-water, starvation), or
+    # "full" (gauges + on-device safety/liveness invariant checks).
+    # Static: each level is its own compiled program.
+    monitor_level: str = "off"
+    # Commit-stall watchdog grace window (ms). 0 = derive per sweep from
+    # the view timeout and the scenario's delay tables (scenario-aware:
+    # a DDoS that slows every link widens the window it is judged by).
+    monitor_stall_grace_ms: float = 0.0
 
     def delays_ms(self) -> np.ndarray:
         return one_way_delay_ms(self.n_replicas)

@@ -159,6 +159,16 @@ class RingSpec:
         return (self.offset(name), c.width, self.flag(name), c.additive)
 
 
+def ring_occupancy(spec: RingSpec, ring: Dict[str, jax.Array]) -> jax.Array:
+    """Fraction of (slot, sender, receiver, channel) entries currently
+    holding an undelivered message — the flag fields are >0.5 exactly
+    while a send waits in its arrival slot, so this is a direct in-flight
+    occupancy gauge of the delivery ring (repro.obs.monitor)."""
+    flags = jnp.stack([ring["buf"][..., spec.flag(c.name)]
+                       for c in spec.channels], axis=-1)
+    return jnp.mean((flags > 0.5).astype(jnp.float32))
+
+
 class Send(NamedTuple):
     """One buffered send of a tick: channel name + the legacy ``send``
     arguments. The per-tick send list of a protocol is static (same

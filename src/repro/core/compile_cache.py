@@ -69,7 +69,14 @@ def _on_duration(event: str, duration_secs: float, **kw) -> None:
         if event == _DUR_BACKEND_COMPILE:
             _counters["backend_compile_s"] += duration_secs
         elif event == _DUR_SAVED:
-            _counters["compile_saved_s"] += duration_secs
+            # jax reports saved = (estimated compile time) - (retrieval
+            # cost) per hit, which goes NEGATIVE for cheap programs whose
+            # retrieval costs more than the compile it skipped — summing
+            # raw deltas made whole suites report negative savings
+            # (BENCH_core.json channel: -0.126s). A hit never *costs*
+            # compile time (retrieval is accounted separately under
+            # cache_retrieval_s), so clamp per event.
+            _counters["compile_saved_s"] += max(duration_secs, 0.0)
         elif event == _DUR_RETRIEVAL:
             _counters["cache_retrieval_s"] += duration_secs
 

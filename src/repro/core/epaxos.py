@@ -24,6 +24,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.configs.smr import SMRConfig
+from repro.obs import monitor as hmon
 from repro.obs.decode import host_phases
 from repro.obs.trace import TraceLevel
 from repro.workloads.analytic import (
@@ -132,4 +133,22 @@ def _epaxos_once(cfg: SMRConfig, rate_tx_s: float,
            "timeline": timeline / 0.5}
     if phases is not None:
         out.update(host_phases(phases, wt))
+    if hmon.on(cfg.monitor_level):
+        # host twin of the device monitor: the model is correct by
+        # construction, so the checks are overdraw-style — more committed
+        # than offered would be a phantom commit; events sort by commit
+        # time, so a backwards execution order would be a prefix break
+        offered = rate_tx_s * sim_ms / 1000.0
+        execs = [e[1] for e in events]
+        starved = sum(1 for create, commit, _, cnt, _ in events
+                      if commit >= sim_ms)
+        out["monitor"] = hmon.host_verdict(
+            violations={
+                "commit_once": int(committed > offered * 1.01 + 1.0),
+                "prefix": sum(1 for a, b in zip(execs, execs[1:])
+                              if b < a),
+            },
+            gauges={"starved_batches": int(starved),
+                    "instances": len(events)},
+            level=cfg.monitor_level)
     return out

@@ -378,6 +378,9 @@ class PendingSweep:
                     r[k] = out[k][i]
             if "obs" in out:
                 r["obs"] = jax.tree.map(lambda x: x[i], out["obs"])
+            # health-monitor outputs (absent at MonitorLevel.OFF)
+            if "mon" in out:
+                r["mon"] = jax.tree.map(lambda x: x[i], out["mon"])
             results.append(r)
         self._results = results
         return results

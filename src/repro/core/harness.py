@@ -24,7 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.smr import SMRConfig
+from repro.core import channel as ch
 from repro.core import mandator, netsim, paxos, sporades
+from repro.obs import monitor as hmon
 from repro.obs import trace as obs
 from repro.workloads.compile import TRIVIAL_MODE, WorkloadMode
 
@@ -77,6 +79,73 @@ def _closed_feedback(protocol: str, carry: Dict, out: Dict) -> Dict:
     return carry
 
 
+def _monitor_views(protocol: str, cfg: SMRConfig, carry: Dict) -> Dict:
+    """Protocol-state projection the health monitor consumes
+    (repro.obs.monitor.update): per-replica committed vector clocks /
+    monotone commit keys / views where the protocol has them (None keys
+    statically compile the corresponding check out), per-origin formed vs
+    stable rounds (the starvation gauge), a cluster commit total (the
+    watchdog's progress signal), a pending-work flag, packed-ring
+    occupancy, and the per-tick dropped-send counts the ticks stash in
+    ``mon_io``."""
+    n = cfg.n_replicas
+    views: Dict = {"cvc": None, "commit_seq": None, "view": None}
+    rings = []
+    dropped = jnp.zeros((n,), jnp.int32)
+    if protocol in ("mandator-sporades", "mandator-paxos", "mandator"):
+        m = carry["m"]
+        rings.append((mandator.ring_spec(), m["ring"]))
+        dropped = dropped + m["mon_io"]["dropped"]
+        views["formed"] = m["formed_round"]
+        views["stable"] = m["own_round"]
+        pending = jnp.sum(m["wl"]["buffer"]) > 0
+    if protocol == "mandator":
+        # lcr rows are per-replica *knowledge* vectors — cross-replica
+        # comparability is not an invariant of dissemination alone, so no
+        # cvc here (no agreement check); completion order still is one.
+        views["commit_seq"] = m["own_round"]
+        views["commit_tot"] = jnp.sum(m["own_round"]).astype(jnp.float32)
+        views["pending"] = pending | jnp.any(
+            m["formed_round"] > m["own_round"])
+    elif protocol == "mandator-sporades":
+        s = carry["s"]
+        rings.append((sporades.ring_spec(n), s["ring"]))
+        dropped = dropped + s["mon_io"]["dropped"]
+        views["cvc"] = s["cvc"]
+        views["commit_seq"] = s["commit_key"]
+        views["view"] = s["v_cur"]
+        views["commit_tot"] = jnp.sum(s["cvc"]).astype(jnp.float32)
+        views["pending"] = pending | jnp.any(
+            m["formed_round"] > jnp.max(s["cvc"], axis=0))
+    elif protocol == "mandator-paxos":
+        p = carry["p"]
+        rings.append((paxos.ring_spec(n, True), p["ring"]))
+        dropped = dropped + p["mon_io"]["dropped"]
+        views["cvc"] = p["cvc"]
+        views["view"] = p["view"]
+        views["commit_tot"] = jnp.sum(p["cvc"]).astype(jnp.float32)
+        views["pending"] = pending | jnp.any(
+            m["formed_round"] > jnp.max(p["cvc"], axis=0))
+    elif protocol == "multipaxos":
+        p = carry["p"]
+        rings.append((paxos.ring_spec(n, False), p["ring"]))
+        dropped = dropped + p["mon_io"]["dropped"]
+        # per-replica slot counters are each leader's own ledger: formed
+        # (last started) vs stable (last committed) per replica
+        views["formed"] = p["slot"]
+        views["stable"] = p["committed_slot"]
+        views["commit_seq"] = p["committed_slot"]
+        views["view"] = p["view"]
+        views["commit_tot"] = jnp.sum(
+            p["committed_slot"]).astype(jnp.float32)
+        views["pending"] = (jnp.sum(p["wl"]["buffer"]) > 0) \
+            | jnp.any(p["outstanding"])
+    occ = [ch.ring_occupancy(spec, ring) for spec, ring in rings]
+    views["ring_occ"] = occ[0] if len(occ) == 1 else jnp.maximum(*occ)
+    views["dropped"] = dropped
+    return views
+
+
 def _scan_body(protocol: str, cfg: SMRConfig, n_ticks: int,
                rate_per_tick: jax.Array, env: Dict, seed: jax.Array,
                wlt: Dict | None = None,
@@ -94,6 +163,14 @@ def _scan_body(protocol: str, cfg: SMRConfig, n_ticks: int,
         st["p"] = paxos.init_state(cfg, n_ticks,
                                    mandator_mode=(protocol == "mandator-paxos"),
                                    closed=mode.closed)
+    # health monitor (repro.obs.monitor): absent from the carry at the
+    # default monitor_level="off" — the compiled program is then
+    # instruction-identical to an unmonitored build, like trace_level
+    mon_on = hmon.on(cfg.monitor_level)
+    if mon_on:
+        st["mon"] = hmon.init_monitor(cfg, n_ticks,
+                                      _monitor_views(protocol, cfg, st))
+        grace = hmon.stall_grace_ticks(cfg, env)
     base_key = jax.random.PRNGKey(seed)
 
     def step(carry, t):
@@ -128,6 +205,16 @@ def _scan_body(protocol: str, cfg: SMRConfig, n_ticks: int,
             out["committed_slot"] = carry["p"]["committed_slot"]
         if mode.closed:
             carry = _closed_feedback(protocol, carry, out)
+        if mon_on:
+            carry = dict(carry)
+            carry["mon"] = hmon.update(
+                carry["mon"], t, cfg, env,
+                _monitor_views(protocol, cfg, carry), grace, wlt=wlt,
+                inflight=out.get("inflight"),
+                # multipaxos closed-loop completion is a pro-rata estimate
+                # (see _closed_feedback), not an exact per-origin count —
+                # the cap invariant is only checkable where done is exact
+                check_cap=mode.closed and protocol != "multipaxos")
         return carry, out
 
     st, trace = jax.lax.scan(step, st, jnp.arange(n_ticks, dtype=jnp.int32))
@@ -246,6 +333,8 @@ def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
                  for k, layer in (("m", "mandator"), ("s", "sporades"),
                                   ("p", "paxos")) if k in st}
         out["obs"] = {k: v for k, v in rings.items() if v is not None}
+    if hmon.on(cfg.monitor_level):
+        out["mon"] = hmon.public_view(st["mon"], n_ticks)
     return out
 
 

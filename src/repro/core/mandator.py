@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim, workload
+from repro.obs import monitor as hmon
 from repro.obs import trace as obs
 
 def ring_spec() -> ch.RingSpec:
@@ -43,6 +44,10 @@ def init_state(cfg: SMRConfig, n_ticks: int, closed: bool = False) -> Dict:
     tr = obs.init_trace(obs.DEFAULT_SPEC, cfg.trace_level, n,
                         cfg.trace_events)
     extra = {"tr": tr} if tr is not None else {}
+    # health monitor per-tick IO gauges (repro.obs.monitor): absent at
+    # monitor_level="off", same structural gating as the recorder
+    if hmon.on(cfg.monitor_level):
+        extra["mon_io"] = {"dropped": jnp.zeros((n,), jnp.int32)}
     return {
         **extra,
         "wl": workload.init_workload(cfg, n_ticks, closed=closed),
@@ -128,8 +133,11 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     ring = ch.ring_commit(spec, st["ring"], t, sends, drop=drop,
                           backend=cfg.channel_backend)
 
-    # ---- flight recorder (repro.obs; absent => compiled out) --------------
+    # ---- flight recorder + monitor IO (absent => compiled out) ------------
     tr = st.get("tr")
+    if tr is not None or "mon_io" in st:
+        cut = jnp.sum(vote_mask & drop, axis=1) \
+            + jnp.sum(formed[:, None] & drop, axis=1)
     if tr is not None:
         es = obs.DEFAULT_SPEC
         completed = own_round - st["own_round"]
@@ -141,11 +149,11 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
                         b=count)
         tr = obs.record(es, tr, "batch_disseminate", formed, t,
                         a=formed_round, b=jnp.max(ser_delay, axis=1))
-        cut = jnp.sum(vote_mask & drop, axis=1) \
-            + jnp.sum(formed[:, None] & drop, axis=1)
         tr = obs.record_env(es, tr, alive, t, a=own_round, b=formed_round,
                             dropped_links=cut)
         st["tr"] = tr
+    if "mon_io" in st:
+        st["mon_io"] = {"dropped": cut.astype(jnp.int32)}
 
     st.update(wl=wl, own_round=own_round, formed_round=formed_round, lcr=lcr,
               seen_round=seen, vote_max=vote_max, ring=ring,

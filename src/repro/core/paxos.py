@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim, workload
+from repro.obs import monitor as hmon
 from repro.obs import trace as obs
 
 def _phase1_ticks(cfg: SMRConfig) -> jnp.ndarray:
@@ -58,6 +59,9 @@ def init_state(cfg: SMRConfig, n_ticks: int, mandator_mode: bool,
     tr = obs.init_trace(obs.DEFAULT_SPEC, cfg.trace_level, n,
                         cfg.trace_events)
     extra = {"tr": tr} if tr is not None else {}
+    # health monitor per-tick IO gauges: absent at monitor_level="off"
+    if hmon.on(cfg.monitor_level):
+        extra["mon_io"] = {"dropped": jnp.zeros((n,), jnp.int32)}
     return {
         **extra,
         "wl": workload.init_workload(cfg, n_ticks,
@@ -204,8 +208,13 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
     ring = ch.ring_commit(spec, st["ring"], t, sends, drop=drop,
                           backend=cfg.channel_backend)
 
-    # ---- flight recorder (repro.obs; absent => compiled out) --------------
+    # ---- flight recorder + monitor IO (absent => compiled out) ------------
     tr = st.get("tr")
+    if tr is not None or "mon_io" in st:
+        sent_any = sends[0].mask
+        for s in sends[1:]:
+            sent_any = sent_any | s.mask
+        cut = jnp.sum(sent_any & drop, axis=1)
     if tr is not None:
         es = obs.DEFAULT_SPEC
         tr = obs.record(es, tr, "view_change", view != st["view"], t,
@@ -217,12 +226,11 @@ def tick(st: Dict, t: jax.Array, key: jax.Array, env: Dict, cfg: SMRConfig,
         tr = obs.record(es, tr, "batch_create", formed, t, a=slot, b=count)
         tr = obs.record(es, tr, "batch_disseminate", formed, t, a=slot,
                         b=jnp.max(ser, axis=1))
-        sent_any = sends[0].mask
-        for s in sends[1:]:
-            sent_any = sent_any | s.mask
         tr = obs.record_env(es, tr, alive, t, a=view, b=slot,
-                            dropped_links=jnp.sum(sent_any & drop, axis=1))
+                            dropped_links=cut)
         st["tr"] = tr
+    if "mon_io" in st:
+        st["mon_io"] = {"dropped": cut.astype(jnp.int32)}
 
     st.update(wl=wl, view=view, last_heard=last_heard, ready_at=ready_at,
               slot=slot, outstanding=outstanding, acks=acks,

@@ -19,6 +19,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.configs.smr import SMRConfig
+from repro.obs import monitor as hmon
 from repro.obs.decode import host_phases
 from repro.obs.trace import HostTrace, TraceLevel
 from repro.workloads.analytic import (
@@ -87,6 +88,8 @@ def _rabia_once(cfg: SMRConfig, rate_tx_s: float,
         else None
     ptr = 0
     slot_idx = 0
+    null_slots = 0
+    commit_ts = []
     t_slot = slot_ms
     while t_slot < sim_ms and ptr < len(streams):
         create, origin, cnt = streams[ptr]
@@ -94,6 +97,7 @@ def _rabia_once(cfg: SMRConfig, rate_tx_s: float,
             t_end = t_slot + slot_ms
             if t_end < sim_ms:
                 committed += cnt
+                commit_ts.append(t_end)
                 lat.append(t_end - create)
                 wt.append(cnt)
                 timeline[int(t_end // 500)] += cnt
@@ -106,6 +110,7 @@ def _rabia_once(cfg: SMRConfig, rate_tx_s: float,
             ptr += 1
         else:
             # NULL slot (coin round commits nothing)
+            null_slots += 1
             if tr is not None:
                 tr.record("view_change", t_slot / cfg.tick_ms,
                           view=slot_idx, round=0)
@@ -128,4 +133,20 @@ def _rabia_once(cfg: SMRConfig, rate_tx_s: float,
             "events": tr.events if cfg.trace_level == TraceLevel.FULL
             else []}
         out.update(host_phases(phases, wt))
+    if hmon.on(cfg.monitor_level):
+        # host twin of the device monitor: slots commit one batch each in
+        # strictly increasing slot time (a backwards commit would break
+        # prefix order), never more than was offered; NULL-round fraction
+        # is THE Rabia starvation gauge (the WAN-collapse mechanism)
+        offered = rate_tx_s * sim_ms / 1000.0
+        out["monitor"] = hmon.host_verdict(
+            violations={
+                "commit_once": int(committed > offered * 1.01 + 1.0),
+                "prefix": sum(1 for a, b in zip(commit_ts, commit_ts[1:])
+                              if b <= a),
+            },
+            gauges={"null_slots": int(null_slots),
+                    "null_frac": round(null_slots / max(slot_idx, 1), 4),
+                    "backlog": int(len(streams) - ptr)},
+            level=cfg.monitor_level)
     return out

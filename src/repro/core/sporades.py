@@ -26,6 +26,7 @@ from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import netsim
 from repro.core.coin import coin_table
+from repro.obs import monitor as hmon
 from repro.obs import trace as obs
 
 RS = 1 << 14                    # rounds-per-view bound (rank key packing)
@@ -57,6 +58,9 @@ def init_state(cfg: SMRConfig, n_ticks: int) -> Dict:
     tr = obs.init_trace(obs.DEFAULT_SPEC, cfg.trace_level, n,
                         cfg.trace_events)
     extra = {"tr": tr} if tr is not None else {}
+    # health monitor per-tick IO gauges: absent at monitor_level="off"
+    if hmon.on(cfg.monitor_level):
+        extra["mon_io"] = {"dropped": jnp.zeros((n,), jnp.int32)}
     return {
         **extra,
         "v_cur": z(n), "r_cur": z(n),
@@ -339,6 +343,11 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
     # st[...] still holds the tick-entry values here (locals were rebound,
     # the dict is only updated below), so the masks are true transitions.
     tr = st.get("tr")
+    if tr is not None or "mon_io" in st:
+        sent_any = sends[0].mask
+        for s in sends[1:]:
+            sent_any = sent_any | s.mask
+        cut = jnp.sum(sent_any & drop, axis=1)
     if tr is not None:
         es = obs.DEFAULT_SPEC
         vchg = v_cur != st["v_cur"]
@@ -350,12 +359,11 @@ def tick(st: Dict, t: jax.Array, env: Dict, cfg: SMRConfig,
                         t, a=is_async, b=v_cur)
         tr = obs.record(es, tr, "commit", commit_key > st["commit_key"], t,
                         a=commit_key, b=jnp.sum(cvc, axis=1))
-        sent_any = sends[0].mask
-        for s in sends[1:]:
-            sent_any = sent_any | s.mask
         tr = obs.record_env(es, tr, alive, t, a=v_cur, b=r_cur,
-                            dropped_links=jnp.sum(sent_any & drop, axis=1))
+                            dropped_links=cut)
         st["tr"] = tr
+    if "mon_io" in st:
+        st["mon_io"] = {"dropped": cut.astype(jnp.int32)}
 
     st.update(
         v_cur=v_cur, r_cur=r_cur, is_async=is_async, bh_key=bh_key,

@@ -1,18 +1,26 @@
-"""Protocol flight recorder (observability substrate).
+"""Protocol flight recorder + health monitor (observability substrate).
 
-Three layers, consensus-agnostic:
+Five layers, consensus-agnostic:
 
-  - ``obs.trace``  — on-device event rings + counters, vmap-safe, carried
+  - ``obs.trace``   — on-device event rings + counters, vmap-safe, carried
     inside the protocol scan; statically gated by ``SMRConfig.trace_level``
     so ``off`` (the default) compiles to the identical program;
-  - ``obs.decode`` — host-side ring -> per-replica event timelines;
-  - ``obs.export`` — Chrome/Perfetto ``trace_event`` JSON + the per-phase
+  - ``obs.monitor`` — on-device safety/liveness invariant checks + resource
+    gauges, same carry, same static gating via ``SMRConfig.monitor_level``;
+  - ``obs.decode``  — host-side ring -> per-replica event timelines;
+  - ``obs.export``  — Chrome/Perfetto ``trace_event`` JSON (phase spans,
+    event instants, throughput + gauge counter tracks) + the per-phase
     latency table (``benchmarks/inspect.py`` and the demo's ``--trace``
-    drive both).
+    drive both);
+  - ``obs.history`` — the append-only ``BENCH_history.jsonl`` benchmark
+    ledger and the CI regression gate (``compare``).
 
 See docs/ARCHITECTURE.md "Observability".
 """
-from repro.obs import decode, export  # noqa: F401
+from repro.obs import decode, export, history, monitor  # noqa: F401
+from repro.obs.monitor import (  # noqa: F401
+    MONITOR_ENV, VIOLATIONS, HostMonitor, MonitorLevel,
+)
 from repro.obs.trace import (  # noqa: F401
     DEFAULT_SPEC, FIELDS, PHASES, TRACE_ENV, HostTrace, TraceLevel,
     TraceSpec, init_trace, level_from_env, public_view, record, record_env,

@@ -32,6 +32,11 @@ TID_PHASES = 0
 TID_MODE = 1
 _LAYER_TID0 = 2      # layer instant tracks start here, in sorted order
 
+# cluster-process thread ids: 0 = scenario, 1 = committed tx/s counter,
+# then the health-monitor gauge counters (repro.obs.monitor)
+TID_GAUGE_OCC = 2
+TID_GAUGE_DROP = 3
+
 _PH_ALLOWED = {"M", "i", "I", "X", "C"}
 
 # batch_marks_t rows (harness.sim_point): absolute ticks of each boundary
@@ -156,6 +161,23 @@ def chrome_trace(result: Dict, cfg, protocol: str, scenario=None,
                        "name": "committed tx/s", "ts": b * 500e3,
                        "args": {"tx_s": float(v)}})
 
+    # ---- health-monitor resource gauges as counter tracks --------------
+    # (repro.obs.monitor; present when the point ran with monitor_level
+    # != "off" — same 500ms buckets as the throughput counter)
+    mon = result.get("mon")
+    if mon is not None:
+        ev += _meta(pid_c, "", TID_GAUGE_OCC, "ring occupancy")
+        ev += _meta(pid_c, "", TID_GAUGE_DROP, "dropped sends/s")
+        occ = np.asarray(mon["occ_tl"])
+        drp = np.asarray(mon["drop_tl"])
+        for b in range(occ.shape[0]):
+            ev.append({"ph": "C", "pid": pid_c, "tid": TID_GAUGE_OCC,
+                       "name": "ring occupancy", "ts": b * 500e3,
+                       "args": {"occupancy": float(occ[b])}})
+            ev.append({"ph": "C", "pid": pid_c, "tid": TID_GAUGE_DROP,
+                       "name": "dropped sends/s", "ts": b * 500e3,
+                       "args": {"sends_s": float(drp[b]) / 0.5}})
+
     return {"displayTimeUnit": "ms", "traceEvents": ev,
             "otherData": {"protocol": protocol,
                           "scenario": getattr(scenario, "name", "baseline"),
@@ -187,6 +209,16 @@ def validate(trace: Dict) -> None:
         if ph == "X":
             if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
                 raise ValueError(f"event {k}: X event needs dur >= 0")
+        if ph == "C":
+            # counter tracks must carry at least one finite numeric series
+            # value (Perfetto drops NaN/non-numeric counter samples)
+            a = e.get("args")
+            if not isinstance(a, dict) or not a:
+                raise ValueError(f"event {k}: C event needs args")
+            for ak, av in a.items():
+                if not isinstance(av, (int, float)) or not np.isfinite(av):
+                    raise ValueError(
+                        f"event {k}: C arg {ak!r} must be finite numeric")
 
 
 def write(path, trace: Dict) -> Path:

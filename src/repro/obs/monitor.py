@@ -1,0 +1,427 @@
+"""On-device consensus health monitor: invariant checks + resource gauges.
+
+The paper's claim is not just that Mandator/Sporades is *fast* under
+asynchrony and DDoS — it is that the protocols stay *safe* (agreement,
+log-prefix order, commit-once, monotone views) and *live* (commits resume
+within a bounded window once the network heals).  The flight recorder
+(obs/trace.py) records what happened; this module checks that what
+happened was correct, per tick, on device, inside the same
+``jax.lax.scan`` carry — so a whole sweep grid vmaps the monitor exactly
+like it vmaps the channel rings.
+
+Gating is *static* and mirrors ``trace_level``: ``SMRConfig.monitor_level``
+is a frozen-dataclass field and cfg is a jit static argument, so at
+``MonitorLevel.OFF`` (the default) ``init_monitor`` returns None, nothing
+enters the carry, and the compiled program is instruction-identical to an
+unmonitored build (tests/test_monitor.py pins the outputs bitwise).
+``GAUGES`` carries only the cheap resource reductions; ``FULL`` adds the
+safety/liveness violation counters.
+
+What is checked, per tick (violation counters count *violating ticks*):
+
+- ``agreement``   — the committed vector clocks of every pair of alive
+                    replicas are comparable (one dominates the other):
+                    no two alive replicas commit divergent prefixes.
+- ``prefix``      — each replica's committed state never decreases
+                    (elementwise on the committed VC, and on the monotone
+                    commit key/slot): a commit is never retracted.
+- ``commit_once`` — the cluster-wide committed round per origin never
+                    exceeds what that origin has created: nothing commits
+                    a batch that was never formed (no phantom re-commit).
+- ``view_monotone`` — per-replica views/rounds never decrease.
+- ``inflight_cap`` — closed-loop clients never exceed their admission cap
+                    (skipped for multipaxos, whose per-origin completion
+                    split is a pro-rata estimate, not an exact count).
+- ``stall``       — commit-stall watchdog: consecutive ticks where the
+                    cluster is *healthy* (some alive replica sees a
+                    quorum of alive, un-partitioned peers), work is
+                    *pending*, and yet no commit lands, exceed a
+                    scenario-aware grace window (``stall_grace_ticks``:
+                    derived from the view timeout and the env delay
+                    tables, so a DDoS that slows every link widens the
+                    window it is judged by — and a healed partition must
+                    resume commits within it).
+
+Resource gauges (all levels > off): max/mean packed-ring slot occupancy,
+cumulative dropped-send counts, per-replica closed-loop inflight
+high-water marks, per-origin dissemination-starvation high water (batches
+formed but not yet stable), plus 500ms-bucketed occupancy/drop timelines
+that obs/export.py renders as Perfetto counter tracks.
+
+Host side: ``verdict`` folds a collected sweep point into a plain
+verdict dict, ``HostMonitor`` is the twin for the pure-python runtime
+drivers (runtime/*_rt.py), and ``host_verdict`` builds the same schema
+for the analytic epaxos/rabia models.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import netsim
+
+
+class MonitorLevel:
+    """Static monitor gate. OFF compiles the monitor out entirely; GAUGES
+    keeps only the resource reductions; FULL adds the invariant checks."""
+    OFF = "off"
+    GAUGES = "gauges"
+    FULL = "full"
+    ORDER = (OFF, GAUGES, FULL)
+
+    @staticmethod
+    def check(level: str) -> str:
+        if level not in MonitorLevel.ORDER:
+            raise ValueError(f"monitor_level {level!r}; expected one of "
+                             f"{MonitorLevel.ORDER}")
+        return level
+
+
+MONITOR_ENV = "REPRO_MONITOR"  # benchmarks read the level from the env
+
+
+def level_from_env(default: str = MonitorLevel.OFF) -> str:
+    """Monitor level from ``REPRO_MONITOR`` (off/gauges/full); benchmarks
+    use this so the default artifact path stays byte-identical to an
+    unmonitored build while ``REPRO_MONITOR=full`` turns the same suites
+    into invariant checkers."""
+    return MonitorLevel.check(os.environ.get(MONITOR_ENV, default))
+
+
+def on(level: str) -> bool:
+    return MonitorLevel.check(level) != MonitorLevel.OFF
+
+
+# Violation taxonomy; declaration order is the index into ``mon["viol"]``.
+VIOLATIONS = ("agreement", "prefix", "commit_once", "view_monotone",
+              "inflight_cap", "stall")
+
+# Perfetto counter-track bucket width, matching the metric timelines.
+BUCKET_MS = 500.0
+
+
+def n_buckets(n_ticks: int, tick_ms: float) -> int:
+    return max(1, int(np.ceil(n_ticks * tick_ms / BUCKET_MS)))
+
+
+def stall_grace_ticks(cfg, env) -> jax.Array:
+    """Watchdog grace window in ticks. An explicit
+    ``cfg.monitor_stall_grace_ms`` pins it; otherwise it is derived per
+    sweep point from the view timeout plus the scenario's own delay
+    tables (``env["delay_tab"]`` is a traced leaf, so a vmapped grid gets
+    a per-lane window) — generous on purpose: the watchdog flags silent
+    stalls, not slow commits."""
+    if cfg.monitor_stall_grace_ms > 0:
+        return jnp.float32(cfg.monitor_stall_grace_ms / cfg.tick_ms)
+    static_delay = float(np.max(cfg.delays_ms())) / cfg.tick_ms
+    to_ticks = cfg.view_timeout_ms / cfg.tick_ms
+    extra = jnp.max(env["delay_tab"]).astype(jnp.float32)  # scenario ticks
+    return jnp.float32(4.0 * to_ticks + 8.0 * static_delay + 128.0) \
+        + 8.0 * extra
+
+
+def init_monitor(cfg, n_ticks: int, views: Dict) -> Optional[Dict]:
+    """Monitor carry state, or None at MonitorLevel.OFF (so carrying it in
+    the scan state dict is structurally free when monitoring is off).
+    ``views`` is the t=0 projection from ``harness._monitor_views`` — its
+    keys decide which prev-state slots exist for this protocol."""
+    level = MonitorLevel.check(cfg.monitor_level)
+    if level == MonitorLevel.OFF:
+        return None
+    n = cfg.n_replicas
+    nb = n_buckets(n_ticks, cfg.tick_ms)
+    mon: Dict[str, jax.Array] = {
+        "ring_occ_max": jnp.float32(0.0),
+        "ring_occ_sum": jnp.float32(0.0),
+        "dropped_sends": jnp.zeros((n,), jnp.int32),
+        "inflight_hwm": jnp.zeros((n,), jnp.float32),
+        "starved_max": jnp.zeros((n,), jnp.int32),
+        "occ_tl": jnp.zeros((nb,), jnp.float32),
+        "drop_tl": jnp.zeros((nb,), jnp.float32),
+    }
+    if level == MonitorLevel.FULL:
+        mon["viol"] = jnp.zeros((len(VIOLATIONS),), jnp.int32)
+        mon["stall_run"] = jnp.int32(0)
+        mon["stall_max"] = jnp.int32(0)
+        prev: Dict[str, jax.Array] = {
+            "commit_tot": jnp.asarray(views["commit_tot"], jnp.float32)}
+        for k in ("cvc", "commit_seq", "view"):
+            if views.get(k) is not None:
+                prev[k] = views[k]
+        mon["prev"] = prev
+    return mon
+
+
+def update(mon: Optional[Dict], t: jax.Array, cfg, env, views: Dict,
+           grace_ticks: jax.Array, wlt: Optional[Dict] = None,
+           inflight: Optional[jax.Array] = None,
+           check_cap: bool = False) -> Optional[Dict]:
+    """One monitor tick. ``views`` is the protocol-state projection built
+    by ``harness._monitor_views`` (see there for the per-protocol key
+    map); None monitor state (level off) passes straight through, so call
+    sites need no level branching of their own."""
+    if mon is None:
+        return None
+    mon = dict(mon)
+    # ---- resource gauges (all levels > off) -----------------------------
+    occ = views["ring_occ"]
+    dropped = views["dropped"]
+    mon["ring_occ_max"] = jnp.maximum(mon["ring_occ_max"], occ)
+    mon["ring_occ_sum"] = mon["ring_occ_sum"] + occ
+    mon["dropped_sends"] = mon["dropped_sends"] + dropped
+    nb = mon["occ_tl"].shape[0]
+    b = jnp.clip((t * (cfg.tick_ms / BUCKET_MS)).astype(jnp.int32), 0,
+                 nb - 1)
+    mon["occ_tl"] = mon["occ_tl"].at[b].max(occ)
+    mon["drop_tl"] = mon["drop_tl"].at[b].add(
+        jnp.sum(dropped).astype(jnp.float32))
+    mon["starved_max"] = jnp.maximum(
+        mon["starved_max"],
+        (views["formed"] - views["stable"]).astype(jnp.int32))
+    if inflight is not None:
+        mon["inflight_hwm"] = jnp.maximum(mon["inflight_hwm"],
+                                          jnp.asarray(inflight, jnp.float32))
+    if "viol" not in mon:
+        return mon
+    # ---- safety invariants ----------------------------------------------
+    alive = netsim.alive(env, t)
+    prev = dict(mon["prev"])
+    bad: Dict[str, jax.Array] = {}
+    cvc = views.get("cvc")
+    if cvc is not None:
+        # agreement: committed VCs of alive pairs must be comparable —
+        # one replica's committed prefix dominates the other's.
+        ge = jnp.all(cvc[:, None, :] >= cvc[None, :, :], axis=-1)  # [n, n]
+        both = alive[:, None] & alive[None, :]
+        bad["agreement"] = jnp.any(both & ~(ge | ge.T))
+        bad["prefix"] = jnp.any(cvc < prev["cvc"])
+        prev["cvc"] = cvc
+    seq = views.get("commit_seq")
+    if seq is not None:
+        dec = jnp.any(seq < prev["commit_seq"])
+        bad["prefix"] = bad.get("prefix", jnp.asarray(False)) | dec
+        prev["commit_seq"] = seq
+    # commit-once / no phantom commit: the cluster-max committed round per
+    # origin never exceeds what that origin has formed.
+    claim = jnp.max(cvc, axis=0) if cvc is not None else views["stable"]
+    bad["commit_once"] = jnp.any(claim > views["formed"])
+    view = views.get("view")
+    if view is not None:
+        bad["view_monotone"] = jnp.any(view < prev["view"])
+        prev["view"] = view
+    if check_cap and inflight is not None and wlt is not None:
+        over = (jnp.asarray(inflight, jnp.float32) >
+                jnp.asarray(wlt["cap"], jnp.float32) + 0.5)
+        bad["inflight_cap"] = jnp.any(over & (wlt["closed"] > 0))
+    # ---- liveness: commit-stall watchdog --------------------------------
+    commit_tot = jnp.asarray(views["commit_tot"], jnp.float32)
+    progress = commit_tot > prev["commit_tot"]
+    prev["commit_tot"] = commit_tot
+    drop = netsim.link_drop(env, t)
+    conn = (alive[:, None] & alive[None, :] & ~drop & ~drop.T)
+    conn = conn | (jnp.eye(alive.shape[0], dtype=bool) & alive[:, None])
+    degree = jnp.sum(conn, axis=1)
+    quorum = cfg.n_replicas // 2 + 1
+    healthy = jnp.any(degree >= quorum)
+    armed = healthy & views["pending"] & ~progress
+    run = jnp.where(armed, mon["stall_run"] + 1, jnp.int32(0))
+    bad["stall"] = run.astype(jnp.float32) > grace_ticks
+    mon["stall_run"] = run
+    mon["stall_max"] = jnp.maximum(mon["stall_max"], run)
+    mon["viol"] = mon["viol"] + jnp.stack(
+        [jnp.asarray(bad.get(name, False)).astype(jnp.int32)
+         for name in VIOLATIONS])
+    mon["prev"] = prev
+    return mon
+
+
+def public_view(mon: Optional[Dict], n_ticks: int) -> Optional[Dict]:
+    """The monitor leaves worth surfacing out of the scan (everything but
+    the prev-state scratch), with the running occupancy sum folded into a
+    mean."""
+    if mon is None:
+        return None
+    out = {k: v for k, v in mon.items() if k not in ("prev", "stall_run")}
+    out["ring_occ_mean"] = out.pop("ring_occ_sum") / float(max(n_ticks, 1))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Host side: verdicts
+# --------------------------------------------------------------------------
+
+def host_verdict(violations: Optional[Dict[str, int]] = None,
+                 gauges: Optional[Dict] = None,
+                 level: str = MonitorLevel.FULL) -> Dict:
+    """The verdict schema, from plain host-side counts (the analytic
+    epaxos/rabia models and the runtime drivers build these directly)."""
+    viol = {k: int(v) for k, v in (violations or {}).items() if int(v)}
+    return {"ok": not viol, "violations": viol,
+            "gauges": dict(gauges or {}), "level": level}
+
+
+def verdict(result: Dict) -> Optional[Dict]:
+    """Fold one collected sweep point into a verdict dict
+    ``{"ok", "violations", "gauges", "level"}`` — or None when the point
+    was produced with the monitor off. Accepts both scan results (a
+    ``"mon"`` subtree of device arrays) and analytic/host results (a
+    ready-made ``"monitor"`` dict)."""
+    if "monitor" in result:
+        return result["monitor"]
+    mon = result.get("mon")
+    if mon is None:
+        return None
+    viol: Dict[str, int] = {}
+    level = MonitorLevel.GAUGES
+    if "viol" in mon:
+        level = MonitorLevel.FULL
+        counts = np.asarray(mon["viol"])
+        viol = {name: int(counts[i]) for i, name in enumerate(VIOLATIONS)
+                if counts[i]}
+    gauges = {
+        "ring_occ_max": float(mon["ring_occ_max"]),
+        "ring_occ_mean": float(mon["ring_occ_mean"]),
+        "dropped_sends": int(np.sum(np.asarray(mon["dropped_sends"]))),
+        "inflight_hwm": [round(float(x), 3)
+                         for x in np.asarray(mon["inflight_hwm"])],
+        "starved_max": [int(x) for x in np.asarray(mon["starved_max"])],
+    }
+    if "stall_max" in mon:
+        gauges["stall_max_ticks"] = int(mon["stall_max"])
+    return {"ok": not viol, "violations": viol, "gauges": gauges,
+            "level": level}
+
+
+def merge_verdicts(verdicts: List[Optional[Dict]]) -> Optional[Dict]:
+    """Suite-level aggregate over per-point verdicts (None entries — e.g.
+    non-sweep suites — are skipped)."""
+    vs = [v for v in verdicts if v]
+    if not vs:
+        return None
+    viol: Dict[str, int] = {}
+    for v in vs:
+        for k, c in v.get("violations", {}).items():
+            viol[k] = viol.get(k, 0) + int(c)
+    return {"ok": not viol, "violations": viol, "points": len(vs),
+            "level": vs[0].get("level", MonitorLevel.FULL)}
+
+
+def format_verdict(v: Optional[Dict]) -> str:
+    """One-line rendering for benchmark summary lines."""
+    if v is None:
+        return "monitor off"
+    if v.get("ok"):
+        pts = v.get("points")
+        return f"monitor OK ({pts} pts)" if pts else "monitor OK"
+    parts = " ".join(f"{k}={c}" for k, c in sorted(
+        v.get("violations", {}).items()))
+    return f"monitor VIOLATIONS: {parts}"
+
+
+def health_table(result: Dict) -> str:
+    """Verdict + per-replica gauge table for one sweep point
+    (benchmarks/inspect.py --health)."""
+    v = verdict(result)
+    if v is None:
+        return ("(no health data: run with monitor_level='gauges' or "
+                "'full')")
+    lines = [f"health: {format_verdict(v)}  [level={v.get('level')}]"]
+    g = v.get("gauges", {})
+    scalars = {k: val for k, val in g.items()
+               if not isinstance(val, (list, tuple))}
+    if scalars:
+        lines.append("  " + "  ".join(
+            f"{k}={val:.4g}" if isinstance(val, float) else f"{k}={val}"
+            for k, val in sorted(scalars.items())))
+    vectors = {k: val for k, val in g.items()
+               if isinstance(val, (list, tuple))}
+    if vectors:
+        n = max(len(val) for val in vectors.values())
+        head = "  {:<16}".format("replica") + "".join(
+            f"{i:>10}" for i in range(n))
+        lines.append(head)
+        for k, val in sorted(vectors.items()):
+            lines.append("  {:<16}".format(k) + "".join(
+                f"{x:>10.3g}" if isinstance(x, float) else f"{x:>10}"
+                for x in val))
+    return "\n".join(lines)
+
+
+def check_cvc_trace(cvc: np.ndarray,
+                    alive: Optional[np.ndarray] = None) -> Dict[str, int]:
+    """Host-side re-check of a committed-VC trace ``[T, n, n]`` (the
+    sporades ``cvc_all`` output): counts ticks violating agreement
+    (pairwise comparability of alive replicas' committed rows) and prefix
+    monotonicity. Used by the seeded-violation tests to show a mutated
+    committed slot trips exactly the right monitor."""
+    cvc = np.asarray(cvc)
+    T, n, _ = cvc.shape
+    if alive is None:
+        alive = np.ones((T, n), bool)
+    out = {"agreement": 0, "prefix": 0}
+    ge = np.all(cvc[:, :, None, :] >= cvc[:, None, :, :], axis=-1)
+    both = alive[:, :, None] & alive[:, None, :]
+    out["agreement"] = int(np.sum(np.any(both & ~(ge | np.swapaxes(
+        ge, 1, 2)), axis=(1, 2))))
+    out["prefix"] = int(np.sum(np.any(cvc[1:] < cvc[:-1], axis=(1, 2))))
+    return out
+
+
+class HostMonitor:
+    """Host-side twin of the device monitor for the pure-python runtime
+    drivers (runtime/*_rt.py): the same invariant taxonomy over explicit
+    commit/completion observations instead of scanned state."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.violations: Dict[str, int] = {}
+        self._view = np.full((n,), -1, np.int64)       # last (view) seen
+        self._cut: List[Optional[np.ndarray]] = [None] * n
+        self._slot: Dict[tuple, np.ndarray] = {}       # (view, round) -> cut
+        self._done = np.zeros((n,), np.int64)          # completion rounds
+
+    def _flag(self, name: str) -> None:
+        assert name in VIOLATIONS, name
+        self.violations[name] = self.violations.get(name, 0) + 1
+
+    def observe_commit(self, who: int, view: int, rnd: int, cut) -> None:
+        """One actor commits ``cut`` (a length-n committed vector) at
+        (view, round)."""
+        cut = np.asarray(cut)
+        if view < self._view[who]:
+            self._flag("view_monotone")
+        self._view[who] = max(self._view[who], view)
+        prev = self._cut[who]
+        if prev is not None and np.any(cut < prev):
+            self._flag("prefix")
+        key = (int(view), int(rnd))
+        if key in self._slot:
+            if not np.array_equal(self._slot[key], cut):
+                self._flag("commit_once")
+        else:
+            self._slot[key] = cut.copy()
+        for other, oc in enumerate(self._cut):
+            if other == who or oc is None:
+                continue
+            if not (np.all(cut >= oc) or np.all(cut <= oc)):
+                self._flag("agreement")
+        self._cut[who] = np.maximum(cut, prev) if prev is not None else cut
+
+    def observe_completion(self, who: int, rnd: int) -> None:
+        """One dissemination pod completes round ``rnd``: completions are
+        strictly in round order and never repeat."""
+        last = int(self._done[who])
+        if rnd <= last:
+            self._flag("commit_once")
+        elif rnd != last + 1:
+            self._flag("prefix")
+        self._done[who] = max(last, rnd)
+
+    def verdict(self) -> Dict:
+        return host_verdict(self.violations,
+                            gauges={"commits": len(self._slot),
+                                    "completions": int(self._done.sum())})

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.monitor import HostMonitor
 from repro.obs.trace import HostTrace
 
 
@@ -44,6 +45,9 @@ class MandatorRuntime:
         self.drop = np.zeros((n_pods, n_pods), bool)   # drop[i, j]: i->j lost
         # flight recorder (host-side twin of repro.obs, same taxonomy)
         self.trace = HostTrace()
+        # health monitor: completions must be strictly in round order and
+        # never repeat (chain order is Algorithm 1's core invariant)
+        self.monitor = HostMonitor(n_pods)
 
     # ---- Algorithm 1 ------------------------------------------------------
     def write(self, pod: int, payload_ready: bool = True) -> Optional[int]:
@@ -75,6 +79,7 @@ class MandatorRuntime:
             p.own_round = r
             p.awaiting = False
             p.lcr[owner] = r
+            self.monitor.observe_completion(owner, r)
             self.trace.record("batch_stable", r, who=owner, round=r,
                               completed=1)
 

@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.coin import common_coin_flip
+from repro.obs.monitor import HostMonitor
 from repro.obs.trace import HostTrace
 
 
@@ -56,6 +57,9 @@ class SporadesRuntime:
         self.round = 0
         # flight recorder (host-side twin of repro.obs, same taxonomy)
         self.trace = HostTrace()
+        # health monitor: every commit any controller applies is checked
+        # for monotone views, prefix order, commit-once and agreement
+        self.monitor = HostMonitor(n_pods)
 
     # ---- liveness predicates ----------------------------------------------
     def _responsive(self) -> List[int]:
@@ -122,6 +126,7 @@ class SporadesRuntime:
             c.v_cur = rec.view
             c.r_cur = rec.round
             c.committed.append(rec)
+            self.monitor.observe_commit(i, rec.view, rec.round, rec.cut)
 
     # ---- failure injection ---------------------------------------------------
     def crash(self, pod: int) -> None:

@@ -215,3 +215,19 @@ def test_warm_cache_process_zero_new_compiles_bitwise_identical(tmp_path):
         "tracing still happens per process (only XLA compile is cached)"
     assert warm["results"] == cold["results"], \
         "warm-cache results must be bitwise identical"
+
+
+def test_saved_time_counter_clamps_negative_events():
+    """jax reports compile_time_saved per hit as (estimated compile) -
+    (retrieval cost), which goes negative for cheap programs — raw
+    accumulation made whole suites report negative savings. The listener
+    clamps per event: negatives are dropped, positives accumulate."""
+    before = compile_cache.stats()["compile_saved_s"]
+    compile_cache._on_duration(compile_cache._DUR_SAVED,
+                               duration_secs=-0.5)
+    assert compile_cache.stats()["compile_saved_s"] == pytest.approx(before)
+    compile_cache._on_duration(compile_cache._DUR_SAVED, duration_secs=0.25)
+    compile_cache._on_duration(compile_cache._DUR_SAVED,
+                               duration_secs=-1.25)
+    assert compile_cache.stats()["compile_saved_s"] == pytest.approx(
+        before + 0.25)

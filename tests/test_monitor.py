@@ -1,0 +1,390 @@
+"""Consensus health monitor (repro/obs/monitor + history): the OFF level
+is bitwise inert for every scan protocol (monitoring must never perturb
+the physics), the full monitor reports ZERO violations across the entire
+curated scenario library and all six protocols, seeded violations each
+trip exactly their own invariant counter, the commit-stall watchdog fires
+on a frozen-leader cluster and stays silent when views rotate, and the
+BENCH_history.jsonl ledger round-trips + gates regressions."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.smr import SMRConfig
+from repro.core import netsim
+from repro.core.experiment import ANALYTIC_PROTOCOLS, SweepSpec, run_sweep
+from repro.core.harness import SCAN_PROTOCOLS, run_sim
+from repro.obs import export, history, monitor
+from repro.obs.monitor import MonitorLevel, VIOLATIONS, HostMonitor
+from repro.obs.trace import TraceLevel
+from repro.scenarios import Partition, Scenario
+from repro.scenarios import library as scenario_library
+
+SIM_S = 1.0
+RATE = 50_000.0
+
+# keys every scan protocol emits that are plain metric arrays (the mon
+# keys are additions, not perturbations — asserted separately)
+METRIC_KEYS = ("throughput", "median_ms", "p99_ms", "committed", "timeline",
+               "origin_median_ms", "origin_p99_ms", "origin_timeline",
+               "origin_lat_ms_timeline")
+
+VIDX = {name: i for i, name in enumerate(VIOLATIONS)}
+
+
+def _viol(r) -> np.ndarray:
+    return np.asarray(r["mon"]["viol"])
+
+
+# ----------------------------------------- off == monitored, bitwise -----
+
+@pytest.mark.parametrize("protocol", SCAN_PROTOCOLS)
+@pytest.mark.parametrize("scenario_name", ["baseline", "paper-ddos"])
+def test_monitor_level_off_is_bitwise_inert(protocol, scenario_name):
+    """Every metric is bit-identical across off/gauges/full: the monitor
+    only ever *reads* protocol state, and at OFF it is compiled out."""
+    scen = None if scenario_name == "baseline" \
+        else scenario_library.get("paper-ddos", SIM_S)
+    outs = {}
+    for level in MonitorLevel.ORDER:
+        cfg = SMRConfig(sim_seconds=SIM_S, monitor_level=level)
+        outs[level] = run_sim(protocol, cfg, RATE, scenario=scen)
+    for level in (MonitorLevel.GAUGES, MonitorLevel.FULL):
+        for k in METRIC_KEYS:
+            np.testing.assert_array_equal(
+                np.asarray(outs[MonitorLevel.OFF][k]),
+                np.asarray(outs[level][k]),
+                err_msg=f"{protocol}/{level}/{k}")
+    # the monitored runs actually carry the additions
+    assert "mon" not in outs[MonitorLevel.OFF]
+    assert "viol" not in outs[MonitorLevel.GAUGES]["mon"]
+    assert outs[MonitorLevel.FULL]["mon"]["viol"].shape == (len(VIOLATIONS),)
+
+
+def test_off_config_is_the_default():
+    assert SMRConfig().monitor_level == MonitorLevel.OFF
+
+
+# ----------------------------------------- zero violations, full library --
+
+def test_full_monitor_is_silent_across_scenario_library():
+    """Every curated adversary × mandator-sporades, one batched sweep (one
+    compiled program — scenarios are data): zero violations. The paper's
+    robustness claim as an invariant, not a throughput number."""
+    cfg = SMRConfig(sim_seconds=SIM_S, monitor_level=MonitorLevel.FULL)
+    lib = scenario_library.scenarios(SIM_S, cfg.n_replicas)
+    spec = SweepSpec(rates=(RATE,), scenarios=tuple(lib.values()))
+    for name, r in zip(lib, run_sweep("mandator-sporades", cfg, spec)):
+        counts = _viol(r)
+        assert not counts.any(), \
+            f"{name}: " + " ".join(f"{v}={counts[VIDX[v]]}"
+                                   for v in VIOLATIONS if counts[VIDX[v]])
+        v = monitor.verdict(r)
+        assert v["ok"] and v["level"] == MonitorLevel.FULL
+
+
+def test_full_monitor_is_silent_for_all_six_protocols():
+    """Fault-free baseline, all six protocols (scan + analytic): every
+    verdict is ok with an empty violation dict."""
+    cfg = SMRConfig(sim_seconds=SIM_S, monitor_level=MonitorLevel.FULL)
+    for proto in SCAN_PROTOCOLS:
+        r = run_sim(proto, cfg, RATE)
+        assert not _viol(r).any(), (proto, _viol(r))
+    for proto, rate in zip(ANALYTIC_PROTOCOLS, (5_000.0, 800.0)):
+        r = run_sweep(proto, cfg, SweepSpec(rates=(rate,)))[0]
+        v = monitor.verdict(r)
+        assert v is not None and v["ok"], (proto, v)
+
+
+# ----------------------------------------- seeded violations, unit --------
+
+def _views(n, cvc=None, commit_seq=None, view=None, formed=None,
+           stable=None, commit_tot=0.0, pending=True, ring_occ=0.0,
+           dropped=None):
+    return {
+        "cvc": None if cvc is None else jnp.asarray(cvc, jnp.int32),
+        "commit_seq": None if commit_seq is None
+        else jnp.asarray(commit_seq, jnp.int32),
+        "view": None if view is None else jnp.asarray(view, jnp.int32),
+        "formed": jnp.asarray(formed if formed is not None else [10] * n,
+                              jnp.int32),
+        "stable": jnp.asarray(stable if stable is not None else [0] * n,
+                              jnp.int32),
+        "commit_tot": jnp.float32(commit_tot),
+        "pending": jnp.asarray(pending),
+        "ring_occ": jnp.float32(ring_occ),
+        "dropped": jnp.asarray(dropped if dropped is not None else [0] * n,
+                               jnp.int32),
+    }
+
+
+class TestSeededViolations:
+    """Each hand-built state mutation trips exactly its own counter."""
+    N = 3
+
+    def _run(self, views0, views1, cfg_kw=None, upd_kw=None, repeats=1):
+        cfg = SMRConfig(n_replicas=self.N, sim_seconds=SIM_S,
+                        monitor_level=MonitorLevel.FULL, **(cfg_kw or {}))
+        env = netsim.build_env(cfg)
+        grace = monitor.stall_grace_ticks(cfg, env)
+        mon = monitor.init_monitor(cfg, 100, views0)
+        for t in range(repeats):
+            mon = monitor.update(mon, jnp.int32(t), cfg, env, views1, grace,
+                                 **(upd_kw or {}))
+        return np.asarray(mon["viol"])
+
+    def _assert_only(self, counts, name, expect=None):
+        assert counts[VIDX[name]] > 0, (name, counts)
+        if expect is not None:
+            assert counts[VIDX[name]] == expect, (name, counts)
+        others = [v for v in VIOLATIONS if v != name]
+        assert not any(counts[VIDX[v]] for v in others), (name, counts)
+
+    def test_agreement(self):
+        # two alive replicas committed divergent prefixes: neither VC
+        # dominates the other
+        z = np.zeros((self.N, self.N), np.int32)
+        div = np.array([[2, 0, 0], [0, 2, 0], [0, 0, 0]], np.int32)
+        counts = self._run(_views(self.N, cvc=z, formed=[2, 2, 0]),
+                           _views(self.N, cvc=div, formed=[2, 2, 0]))
+        self._assert_only(counts, "agreement", expect=1)
+
+    def test_prefix_retraction(self):
+        # a committed slot is mutated backwards: commit retracted
+        ones = np.ones((self.N, self.N), np.int32)
+        counts = self._run(_views(self.N, cvc=ones),
+                           _views(self.N, cvc=np.zeros_like(ones)))
+        self._assert_only(counts, "prefix", expect=1)
+
+    def test_commit_once_phantom(self):
+        # the cluster claims round 3 committed for origin 0 which only
+        # ever formed 2 batches: phantom commit
+        claim = np.tile(np.array([3, 0, 0], np.int32), (self.N, 1))
+        counts = self._run(_views(self.N, cvc=np.zeros_like(claim),
+                                  formed=[2, 2, 2]),
+                           _views(self.N, cvc=claim, formed=[2, 2, 2]))
+        self._assert_only(counts, "commit_once", expect=1)
+
+    def test_view_monotone(self):
+        counts = self._run(_views(self.N, view=[1, 1, 1]),
+                           _views(self.N, view=[0, 1, 1]))
+        self._assert_only(counts, "view_monotone", expect=1)
+
+    def test_inflight_cap(self):
+        wlt = {"cap": jnp.asarray([2.0] * self.N),
+               "closed": jnp.asarray([1] * self.N, jnp.int32)}
+        counts = self._run(
+            _views(self.N), _views(self.N),
+            upd_kw=dict(wlt=wlt, inflight=jnp.asarray([5.0, 0.0, 0.0]),
+                        check_cap=True))
+        self._assert_only(counts, "inflight_cap", expect=1)
+
+    def test_stall_watchdog(self):
+        # healthy cluster, work pending, commit_tot frozen: 8 armed ticks
+        # against a 5-tick grace window -> exactly 3 violating ticks
+        tick_ms = SMRConfig().tick_ms
+        counts = self._run(
+            _views(self.N), _views(self.N),
+            cfg_kw=dict(monitor_stall_grace_ms=5.0 * tick_ms), repeats=8)
+        self._assert_only(counts, "stall", expect=3)
+
+    def test_progress_disarms_watchdog(self):
+        cfg = SMRConfig(n_replicas=self.N, sim_seconds=SIM_S,
+                        monitor_level=MonitorLevel.FULL,
+                        monitor_stall_grace_ms=5.0 * SMRConfig().tick_ms)
+        env = netsim.build_env(cfg)
+        grace = monitor.stall_grace_ticks(cfg, env)
+        mon = monitor.init_monitor(cfg, 100, _views(self.N))
+        for t in range(20):  # a commit lands every 4th tick
+            mon = monitor.update(mon, jnp.int32(t), cfg, env,
+                                 _views(self.N, commit_tot=float(t // 4)),
+                                 grace)
+        assert not np.asarray(mon["viol"]).any()
+
+
+# ----------------------------------------- seeded violations, e2e ---------
+
+def test_frozen_leader_trips_stall_watchdog_only():
+    """Multipaxos with its view-0 leader partitioned away and view changes
+    disabled: the majority side is healthy + loaded but can never commit —
+    the watchdog fires; every safety counter stays zero. With the default
+    view timeout the views rotate and the same partition is silent."""
+    sim_s = 1.5
+    frozen = Scenario("frozen-leader", (
+        Partition(start_s=0.0, end_s=sim_s,
+                  groups=((0,), (1, 2, 3, 4))),))
+    cfg = SMRConfig(sim_seconds=sim_s, monitor_level=MonitorLevel.FULL,
+                    view_timeout_ms=10_000.0, monitor_stall_grace_ms=100.0)
+    r = run_sim("multipaxos", cfg, 10_000.0, scenario=frozen)
+    counts = _viol(r)
+    assert counts[VIDX["stall"]] > 0, counts
+    for name in ("agreement", "prefix", "commit_once", "view_monotone"):
+        assert counts[VIDX[name]] == 0, (name, counts)
+    # contrast: normal view timeout -> leadership rotates off the
+    # partitioned replica and commits resume inside the (auto) grace
+    cfg_ok = SMRConfig(sim_seconds=sim_s, monitor_level=MonitorLevel.FULL)
+    r_ok = run_sim("multipaxos", cfg_ok, 10_000.0, scenario=frozen)
+    assert not _viol(r_ok).any(), _viol(r_ok)
+
+
+# ----------------------------------------- host-side re-check -------------
+
+def test_check_cvc_trace_flags_mutated_slot():
+    """Mutating one replica's committed VC in a clean trace flips exactly
+    the agreement (divergence) and prefix (retraction) counters."""
+    T, n = 20, 3
+    base = np.cumsum(np.ones((T, n, n), np.int64), axis=0)  # all equal
+    clean = monitor.check_cvc_trace(base)
+    assert clean == {"agreement": 0, "prefix": 0}
+    bad = base.copy()
+    bad[10, 1] = [0, 99, 0]   # divergent AND a retraction vs t=9
+    res = monitor.check_cvc_trace(bad)
+    assert res["agreement"] >= 1
+    assert res["prefix"] >= 1
+
+
+def test_host_monitor_commit_once_and_clean_flow():
+    hm = HostMonitor(3)
+    cut = np.array([3, 2, 1])
+    hm.observe_commit(0, view=1, rnd=1, cut=cut)
+    hm.observe_commit(1, view=1, rnd=1, cut=cut)       # same slot, same cut
+    assert hm.verdict()["ok"]
+    hm.observe_commit(2, view=1, rnd=1, cut=np.array([9, 9, 9]))
+    v = hm.verdict()
+    assert not v["ok"] and "commit_once" in v["violations"]
+
+
+def test_host_monitor_completion_order():
+    hm = HostMonitor(2)
+    hm.observe_completion(0, 1)
+    hm.observe_completion(0, 2)
+    assert hm.verdict()["ok"]
+    hm.observe_completion(0, 2)                        # repeat -> once
+    hm.observe_completion(0, 5)                        # gap -> prefix
+    v = hm.verdict()
+    assert v["violations"] == {"commit_once": 1, "prefix": 1}
+
+
+def test_runtime_drivers_report_clean_verdicts():
+    from repro.runtime.mandator_rt import MandatorRuntime
+    from repro.runtime.sporades_rt import SporadesRuntime
+    mrt = MandatorRuntime(5)
+    for _ in range(4):
+        for p in range(5):
+            mrt.write(p)
+    assert mrt.monitor.verdict()["ok"]
+    srt = SporadesRuntime(5)
+    for step in range(4):
+        cuts = {i: mrt.get_client_requests(i) for i in range(5)}
+        assert srt.commit_step(cuts) is not None
+    assert srt.monitor.verdict()["ok"]
+
+
+# ----------------------------------------- gauges + export ----------------
+
+def test_gauges_flow_into_verdict_and_export():
+    """Gauge counters flow out of the scan into the verdict and the
+    Perfetto counter tracks, and the exported trace passes validation."""
+    cfg = SMRConfig(sim_seconds=SIM_S, trace_level=TraceLevel.FULL,
+                    monitor_level=MonitorLevel.FULL)
+    r = run_sim("mandator-sporades", cfg, RATE)
+    v = monitor.verdict(r)
+    g = v["gauges"]
+    assert 0.0 < g["ring_occ_max"] <= 1.0
+    assert 0.0 < g["ring_occ_mean"] <= g["ring_occ_max"]
+    assert g["dropped_sends"] == 0
+    assert len(g["inflight_hwm"]) == cfg.n_replicas
+    assert len(g["starved_max"]) == cfg.n_replicas
+    assert g["stall_max_ticks"] >= 0
+    trace = export.chrome_trace(r, cfg, "mandator-sporades")
+    export.validate(trace)
+    counters = [e for e in trace["traceEvents"] if e["ph"] == "C"]
+    names = {e["name"] for e in counters}
+    assert "ring occupancy" in names
+    assert "dropped sends/s" in names
+    occ = [e for e in counters if e["name"] == "ring occupancy"]
+    assert max(e["args"]["occupancy"] for e in occ) > 0.0
+    assert monitor.format_verdict(v).startswith("monitor OK")
+    assert "health: monitor OK" in monitor.health_table(r)
+
+
+def test_validate_rejects_bad_counter_args():
+    cfg = SMRConfig(sim_seconds=SIM_S, trace_level=TraceLevel.FULL,
+                    monitor_level=MonitorLevel.GAUGES)
+    r = run_sim("mandator-sporades", cfg, RATE)
+    trace = export.chrome_trace(r, cfg, "mandator-sporades")
+    trace["traceEvents"].append({"ph": "C", "pid": 0, "tid": 2,
+                                 "name": "bad", "ts": 0.0,
+                                 "args": {"x": float("nan")}})
+    with pytest.raises(ValueError, match="finite numeric"):
+        export.validate(trace)
+
+
+# ----------------------------------------- history ledger + gate ----------
+
+def _suites(wall=1.0, ok=True, viol=None, error=None):
+    s = {"wall_s": wall, "compile_s": 0.5, "run_s": 0.5,
+         "xla_compile_s": 0.4, "cache_hits": 1, "cache_misses": 0,
+         "cache_saved_s": 0.1, "traces": 2,
+         "monitor": {"ok": ok, "violations": viol or {}, "level": "full",
+                     "points": 4}}
+    if error:
+        s["error"] = error
+    return {"fig6": s}
+
+
+def test_history_round_trip_and_validation(tmp_path):
+    p = tmp_path / "hist.jsonl"
+    e1 = history.make_entry(_suites(wall=2.0), quick=True,
+                            git_sha="abc", timestamp=100.0)
+    history.append(p, e1)
+    with p.open("a") as f:                     # ledger survives junk lines
+        f.write("not json\n")
+    e2 = history.make_entry(_suites(wall=2.1), quick=True,
+                            git_sha="def", timestamp=200.0)
+    history.append(p, e2)
+    entries = history.load(p)
+    assert len(entries) == 2
+    assert history.latest(p)["git_sha"] == "def"
+    with pytest.raises(ValueError, match="ok=True with violations"):
+        history.validate_entry(
+            history.make_entry(_suites(ok=True, viol={"stall": 3}),
+                               quick=False))
+    with pytest.raises(ValueError, match="wall_s"):
+        history.validate_entry({"schema": 1, "git_sha": "x",
+                                "timestamp": 0.0, "quick": False,
+                                "suites": {"fig6": {}}})
+
+
+def test_history_compare_gates(tmp_path):
+    base = history.make_entry(_suites(wall=10.0), quick=False)
+    # same wall: ok
+    cur = history.make_entry(_suites(wall=10.0), quick=False)
+    assert history.compare(base, cur)["fig6"]["status"] == "ok"
+    # +20% wall: inside the 25% budget
+    cur = history.make_entry(_suites(wall=12.0), quick=False)
+    assert history.compare(base, cur)["fig6"]["status"] == "ok"
+    # +30% wall: warn, with the ratio recorded
+    cur = history.make_entry(_suites(wall=13.0), quick=False)
+    row = history.compare(base, cur)["fig6"]
+    assert row["status"] == "warn" and row["ratio"] == 1.3
+    # monitor violation: fail, regardless of wall-clock
+    cur = history.make_entry(_suites(wall=1.0, ok=False,
+                                     viol={"agreement": 2}), quick=False)
+    row = history.compare(base, cur)["fig6"]
+    assert row["status"] == "fail" and row["violations"] == {"agreement": 2}
+    # suite error: warn
+    cur = history.make_entry(_suites(wall=1.0, error="ValueError"),
+                             quick=False)
+    assert history.compare(base, cur)["fig6"]["status"] == "warn"
+    # no baseline: only its own monitor can fail it
+    row = history.compare(None, cur)["fig6"]
+    assert row["status"] == "warn"           # error still warns
+    lines = history.format_compare(history.compare(base, cur))
+    assert any("fig6" in ln for ln in lines)
+    # entries are single JSON lines (the CI gate reads them back)
+    p = tmp_path / "h.jsonl"
+    history.append(p, history.make_entry(_suites(), quick=True))
+    line = p.read_text().splitlines()[0]
+    assert json.loads(line)["schema"] == history.SCHEMA_VERSION
