@@ -16,6 +16,7 @@ protocol — tracing levels compile their own variants, the default
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -85,6 +86,21 @@ def inspect_point(protocol: str, rate: float, scenario: str = "",
     return p
 
 
+def print_analysis(path) -> None:
+    """Render a tracelint findings artifact (``python -m repro.analysis
+    --json PATH``) as the shared findings table — the static-analysis
+    view next to the runtime ``--health``/trace views."""
+    from repro.analysis import format_table
+    from repro.analysis.findings import findings_from_json
+    findings = findings_from_json(json.loads(Path(path).read_text()))
+    active = sum(1 for f in findings if f.active)
+    print(f"== tracelint findings ({path}): {len(findings)} total, "
+          f"{active} active ==")
+    for line in format_table(findings):
+        print(f" {line}")
+    print()
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="run one traced sweep point and export a "
@@ -109,8 +125,14 @@ def main(argv=None) -> None:
                     help="run the consensus health monitor at full level "
                          "and print the invariant verdict + gauge table "
                          "(composes with --scenario/--workload)")
+    ap.add_argument("--analysis", default="", metavar="PATH",
+                    help="print the tracelint findings table from a "
+                         "`python -m repro.analysis --json PATH` artifact "
+                         "before the point run (composes with --health)")
     ap.add_argument("--no-compile-cache", action="store_true")
     args = ap.parse_args(argv)
+    if args.analysis:
+        print_analysis(args.analysis)
     if args.no_compile_cache:
         compile_cache.disable()
     else:

@@ -60,6 +60,37 @@ def _channel_suite() -> list:
     return rows
 
 
+def _hlo_audit_suite(sim_s: float) -> list:
+    """Tracelint as a benchmark suite: AST repo lint + HLO program audit
+    (repro.analysis). The monitor-shaped verdict lands in the suite's
+    ``monitor`` key so H1–H4 violations gate through history.compare like
+    runtime invariant violations; per-rule active-finding counts land in
+    the ``analysis`` block so lint debt is a trajectory."""
+    from repro.analysis import hlo_lint, run_lint
+    report = run_lint(REPO / "src" / "repro")
+    verdict = hlo_lint.audit(sim_seconds=sim_s, report=report)
+    figures.VERDICTS["hlo-audit"] = verdict
+    counts = {"active": len(report.active)}
+    counts.update(report.counts())
+    _EXTRA["hlo-audit"] = {"analysis": counts}
+    rows = []
+    for proto, d in verdict["protocols"].items():
+        if d.get("program", "x") is None:
+            rows.append((f"hlo-audit/{proto}", 0.0, "analytic:clean"))
+        else:
+            rows.append((f"hlo-audit/{proto}", 0.0,
+                         f"f64={d['f64_ops']};xfer_in_loop="
+                         f"{d['host_transfers_in_loop']};"
+                         f"scan_while={d['scan_whiles']}"))
+    for tag, sigs in verdict["signatures"].items():
+        rows.append((f"hlo-audit/grid-{tag}", 0.0,
+                     f"signatures={len(sigs)}"))
+    rows.append(("hlo-audit/ast", 0.0,
+                 f"active={len(report.active)};"
+                 f"findings={len(report.findings)}"))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -97,6 +128,7 @@ def main() -> None:
         "channel": _channel_suite,
         "roofline_single": lambda: roofline.rows("single"),
         "roofline_multi": lambda: roofline.rows("multi"),
+        "hlo-audit": lambda: _hlo_audit_suite(sim_s),
     }
     if only:
         unknown = only - suites.keys()

@@ -1,0 +1,20 @@
+"""Tracelint: static analysis proving the one-clean-compiled-program-
+per-protocol invariants before runtime.
+
+Two layers, one CLI (``python -m repro.analysis``):
+
+  * ``repro.analysis.lint``      — stdlib-``ast`` repo lint (rules R1–R5,
+    call-graph aware); runs without jax installed.
+  * ``repro.analysis.hlo_lint``  — HLO program auditor over each
+    protocol's canonical compiled program (rules H1–H4); needs jax and
+    benefits from a warm persistent compile cache.
+
+Import surface kept jax-free: ``hlo_lint`` is imported lazily by the
+CLI only when ``--hlo`` is requested.
+"""
+from repro.analysis.findings import (Finding, Report, RULE_KEYS,
+                                     format_table, load_baseline)
+from repro.analysis.lint import ALL_RULES, run_lint
+
+__all__ = ["Finding", "Report", "RULE_KEYS", "ALL_RULES",
+           "run_lint", "format_table", "load_baseline"]

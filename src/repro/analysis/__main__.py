@@ -1,0 +1,130 @@
+"""Tracelint CLI.
+
+  PYTHONPATH=src python -m repro.analysis \\
+      [--rules R1,R4,...] [--baseline analysis/baseline.json] \\
+      [--json findings.json] [--hlo] [--hlo-history BENCH_history.jsonl]
+
+Exit codes: 0 clean (active findings == 0), 1 findings, 2 internal
+error. The AST layer (R1–R5) always runs and needs no jax; ``--hlo``
+additionally lowers each scan protocol's canonical program and audits
+the optimized HLO (H1–H4), appending the verdict to the benchmark
+history ledger when ``--hlo-history`` names a path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.findings import KEY_RULES, format_table, load_baseline
+from repro.analysis.lint import ALL_RULES, run_lint
+
+
+def _parse_rules(spec: str):
+    rules = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        rule = tok.upper() if tok.upper() in ALL_RULES \
+            else KEY_RULES.get(tok.lower())
+        if rule not in ALL_RULES:
+            sys.exit(f"unknown rule {tok!r}; valid: "
+                     f"{', '.join(ALL_RULES)} (or their kebab keys)")
+        rules.append(rule)
+    return tuple(rules)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="tracelint: AST repo lint (R1-R5) + HLO program "
+                    "auditor (H1-H4)")
+    ap.add_argument("--root", default=None,
+                    help="source tree to lint (default: the src/repro "
+                         "this module was imported from)")
+    ap.add_argument("--rules", default="",
+                    help="comma list of AST rules to run, e.g. R1,R4 or "
+                         "traced-purity,drop-mask (default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help="JSON list of known findings that do not fail "
+                         "the run (see findings.py)")
+    ap.add_argument("--update-baseline", default=None,
+                    help="write the current active findings as a new "
+                         "baseline JSON and exit 0")
+    ap.add_argument("--json", default=None,
+                    help="write the full findings list (including "
+                         "allowed/baselined) as JSON")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also audit each protocol's canonical compiled "
+                         "program (needs jax; cheap on a warm "
+                         ".jax_cache)")
+    ap.add_argument("--hlo-history", default=None,
+                    help="append the HLO audit verdict to this "
+                         "BENCH_history.jsonl ledger")
+    ap.add_argument("--sim-seconds", type=float, default=2.0,
+                    help="canonical program length for the HLO audit "
+                         "(2.0 matches the --quick CI cache)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root else Path(__file__).parents[1]
+    rules = _parse_rules(args.rules) or None
+    try:
+        report = run_lint(root, rules=rules)
+    except SyntaxError as e:
+        print(f"error: cannot parse {e.filename}:{e.lineno}: {e.msg}",
+              file=sys.stderr)
+        return 2
+
+    verdict = None
+    if args.hlo:
+        from repro.analysis import hlo_lint
+        try:
+            verdict = hlo_lint.audit(report=report,
+                                     sim_seconds=args.sim_seconds)
+        except Exception as e:  # noqa: BLE001 — exit 2, not a traceback
+            print(f"error: HLO audit failed: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            return 2
+        if not args.quiet:
+            print(hlo_lint.format_verdict(verdict))
+
+    if args.baseline:
+        report.apply_baseline(load_baseline(args.baseline))
+    if verdict is not None and args.hlo_history:
+        from repro.analysis import hlo_lint
+        counts = {"active": len(report.active)}
+        counts.update(report.counts())
+        hlo_lint.append_history(args.hlo_history, verdict,
+                                analysis_counts=counts)
+    if args.update_baseline:
+        Path(args.update_baseline).write_text(
+            json.dumps(report.baseline_json(), indent=1) + "\n")
+        print(f"wrote baseline: {args.update_baseline} "
+              f"({len(report.baseline_json())} findings)")
+        return 0
+    if args.json:
+        Path(args.json).write_text(
+            json.dumps(report.to_json(), indent=1) + "\n")
+
+    active = report.active
+    if not args.quiet:
+        shown = [f for f in report.findings
+                 if f.pragma != "none" or f.active]
+        for line in format_table(shown):
+            print(line)
+        counts = report.counts()
+        print(f"\n{len(active)} active finding(s)"
+              + (f" ({', '.join(f'{r}={n}' for r, n in sorted(counts.items()))})"
+                 if counts else "")
+              + f"; {sum(1 for f in report.findings if f.pragma == 'allowed')}"
+                " allowed by pragma, "
+              + f"{sum(1 for f in report.findings if f.pragma == 'baselined')}"
+                " baselined")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

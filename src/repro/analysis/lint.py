@@ -1,0 +1,634 @@
+"""Tracelint layer 1: call-graph-aware AST lint over ``src/repro``.
+
+Five rules, each a static form of an invariant the test suite currently
+re-proves dynamically with whole sweeps (see docs/ARCHITECTURE.md):
+
+  R1 traced-purity   no host numpy / stdlib random / ``.item()`` /
+                     ``float()``/``int()`` coercions / ``print`` in any
+                     function reachable from a protocol ``tick`` or a
+                     ``lax.scan`` body. Deliberate trace-time constants
+                     get ``# lint: allow(traced-purity): <why>``.
+  R2 dtype-hygiene   no f64 creep toward device buffers: ``np.float64``
+                     (or dtype strings / ``astype(float)``) anywhere in
+                     simulator source is flagged unless justified.
+  R3 static-args     SMRConfig fields steering Python control flow in
+                     traced code must be jit-static: the config class is
+                     a frozen (hashable) dataclass, some jit declares
+                     ``cfg`` in ``static_argnames``, and every
+                     ``cfg.<x>`` branched on is a declared field.
+  R4 drop-mask       every ``channel.Send`` construction must reach a
+                     ``ring_commit(..., drop=...)`` in the same
+                     function, and legacy ``ch.send`` call sites must
+                     pass ``drop=`` (the PR 2 omission-semantics bug
+                     class).
+  R5 carry-hygiene   results of level-gated initializers
+                     (``init_trace`` / ``init_monitor``) may only enter
+                     a state dict behind a None/level guard, so the
+                     subtree is structurally absent from the scan carry
+                     at ``off``.
+
+The call graph is intra-repo and conservative: bare calls resolve within
+the module, ``alias.fn`` through import aliases, and ``obj.method`` only
+when exactly one class in the tree defines that method name. Scan roots
+are functions named ``tick`` in ``core`` protocol modules, any function
+passed to a ``*.scan(...)`` call, and functions marked with a
+``# lint: traced-root`` comment.
+
+Stdlib-only (``ast`` + ``pathlib``): this layer runs on every push with
+no jax installed.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import (Finding, PragmaTable, Report,
+                                     RULE_KEYS)
+
+ALL_RULES = ("R1", "R2", "R3", "R4", "R5")
+
+# numpy attributes that are dtype objects / scalar constants: referencing
+# them inside traced code is trace-time-static and never materializes a
+# host array (np.float64 is deliberately NOT here — that's R2's beat)
+_NP_STATIC_ATTRS = {
+    "float32", "float16", "bfloat16", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "pi", "inf", "nan",
+    "newaxis", "ndarray", "dtype", "integer", "floating",
+}
+# method names too generic to resolve through the unique-method heuristic
+_METHOD_DENY = {
+    "get", "items", "keys", "values", "append", "update", "copy", "pop",
+    "astype", "at", "add", "set", "max", "min", "sum", "any", "all",
+    "mean", "item", "ravel", "reshape", "clip", "sort", "split", "join",
+    "format", "startswith", "endswith", "replace", "count", "points",
+}
+_LEVEL_INITS = {"init_trace", "init_monitor"}
+
+
+def _qual_chain(node: ast.AST) -> Optional[str]:
+    """Flatten a Name/Attribute chain to 'a.b.c' (None if not a chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclass
+class FuncInfo:
+    qual: str                      # e.g. repro.core.mandator.tick
+    module: "ModuleInfo"
+    node: ast.AST                  # FunctionDef
+    calls: List[Tuple[str, int]] = field(default_factory=list)
+    is_root: bool = False
+
+
+class ModuleInfo:
+    def __init__(self, name: str, path: Path, relpath: str):
+        self.name = name
+        self.path = path
+        self.relpath = relpath
+        source = path.read_text()
+        self.tree = ast.parse(source, filename=str(path))
+        self.pragmas = PragmaTable(source, relpath)
+        self.aliases: Dict[str, str] = {}   # local -> module fullname
+        self.symbols: Dict[str, str] = {}   # local -> module.attr fullname
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+
+    def ancestors(self, node: ast.AST):
+        n = self.parents.get(node)
+        while n is not None:
+            yield n
+            n = self.parents.get(n)
+
+
+class Index:
+    """Two-pass repo index: parse + collect defs, then resolve imports
+    and call edges against the collected definitions."""
+
+    def __init__(self, root: Path, rel_to: Path):
+        self.root = root
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.funcs: Dict[str, FuncInfo] = {}
+        self.classes: Dict[str, ast.ClassDef] = {}
+        self.methods: Dict[str, List[str]] = {}  # method name -> quals
+        for path in sorted(root.rglob("*.py")):
+            name = self._module_name(path)
+            rel = path.relative_to(rel_to).as_posix() \
+                if rel_to in path.parents or rel_to == path.parent \
+                or rel_to in path.resolve().parents else str(path)
+            mod = ModuleInfo(name, path, rel)
+            self.modules[name] = mod
+            self._collect_defs(mod)
+        for mod in self.modules.values():
+            self._collect_imports(mod)
+        for fn in self.funcs.values():
+            self._collect_calls(fn)
+        self._mark_roots()
+
+    def _module_name(self, path: Path) -> str:
+        rel = path.relative_to(self.root).with_suffix("")
+        parts = list(rel.parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        # anchor at the import root: src/repro/... lints as repro....
+        prefix = [self.root.name] if self.root.name != "src" else []
+        return ".".join(prefix + parts) if (prefix or parts) else "_"
+
+    def _collect_defs(self, mod: ModuleInfo) -> None:
+        def visit(node: ast.AST, scope: str) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    qual = f"{scope}.{child.name}"
+                    self.funcs[qual] = FuncInfo(qual, mod, child)
+                    visit(child, qual)
+                elif isinstance(child, ast.ClassDef):
+                    qual = f"{scope}.{child.name}"
+                    self.classes[qual] = child
+                    for item in child.body:
+                        if isinstance(item, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                            mq = f"{qual}.{item.name}"
+                            self.funcs[mq] = FuncInfo(mq, mod, item)
+                            self.methods.setdefault(item.name,
+                                                    []).append(mq)
+                            visit(item, mq)
+                else:
+                    visit(child, scope)
+        visit(mod.tree, mod.name)
+
+    def _collect_imports(self, mod: ModuleInfo) -> None:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mod.aliases[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+                    if a.asname is None and "." in a.name:
+                        # `import a.b.c` binds `a`; keep the full path
+                        # resolvable through the dotted chain too
+                        mod.aliases[a.name] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                base = node.module
+                for a in node.names:
+                    local = a.asname or a.name
+                    full = f"{base}.{a.name}"
+                    if full in self.modules or base in ("numpy", "jax"):
+                        mod.aliases[local] = full
+                    else:
+                        mod.symbols[local] = full
+
+    def resolve_module(self, mod: ModuleInfo, chain: str) -> Optional[str]:
+        """Longest prefix of a dotted chain that names a module; returns
+        the full chain rewritten onto the real module name."""
+        parts = chain.split(".")
+        for cut in range(len(parts), 0, -1):
+            prefix = ".".join(parts[:cut])
+            if prefix in mod.aliases:
+                return ".".join([mod.aliases[prefix]] + parts[cut:])
+        return None
+
+    def resolve_call(self, fn: FuncInfo, call: ast.Call) -> Optional[str]:
+        mod = fn.module
+        chain = _qual_chain(call.func)
+        if chain is None:
+            return None
+        if "." not in chain:
+            # bare call: local symbol import, then same module / class
+            if chain in mod.symbols:
+                tgt = mod.symbols[chain]
+                if tgt in self.funcs or tgt in self.classes:
+                    return tgt
+                return None
+            for qual in (f"{mod.name}.{chain}",):
+                if qual in self.funcs or qual in self.classes:
+                    return qual
+            # nested helper of an enclosing function scope
+            scope = fn.qual
+            while "." in scope:
+                scope = scope.rsplit(".", 1)[0]
+                qual = f"{scope}.{chain}"
+                if qual in self.funcs:
+                    return qual
+            return None
+        resolved = self.resolve_module(mod, chain)
+        if resolved is not None:
+            if resolved in self.funcs or resolved in self.classes:
+                return resolved
+            return None
+        # obj.method: unique-method heuristic
+        attr = chain.rsplit(".", 1)[1]
+        cands = self.methods.get(attr, [])
+        if attr not in _METHOD_DENY and len(cands) == 1:
+            return cands[0]
+        return None
+
+    def _collect_calls(self, fn: FuncInfo) -> None:
+        for node in self._own_body(fn.node):
+            if isinstance(node, ast.Call):
+                tgt = self.resolve_call(fn, node)
+                if tgt is not None:
+                    if tgt in self.classes:
+                        tgt = f"{tgt}.__init__"
+                        if tgt not in self.funcs:
+                            continue
+                    fn.calls.append((tgt, node.lineno))
+
+    @staticmethod
+    def _own_body(func_node: ast.AST):
+        """Walk a function body without descending into nested defs
+        (lambdas stay: they trace inline with their enclosing body)."""
+        stack = list(ast.iter_child_nodes(func_node))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _mark_roots(self) -> None:
+        for fn in self.funcs.values():
+            node = fn.node
+            # protocol tick bodies: core/<protocol>.py tick()
+            if (node.name == "tick" and ".core." in f".{fn.qual}."
+                    and fn.qual.count(".") >= 2):
+                fn.is_root = True
+            marker_lines = set(fn.module.pragmas.roots)
+            if {node.lineno, node.lineno - 1} & marker_lines:
+                fn.is_root = True
+        # any function passed (positionally first) to a *.scan(...) call
+        for holder in list(self.funcs.values()):
+            for node in self._own_body(holder.node):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "scan" and node.args):
+                    continue
+                arg = node.args[0]
+                if isinstance(arg, ast.Name):
+                    for scope in (holder.qual, holder.module.name):
+                        qual = f"{scope}.{arg.id}"
+                        if qual in self.funcs:
+                            self.funcs[qual].is_root = True
+                            break
+
+    def reachable(self) -> Set[str]:
+        seen: Set[str] = set()
+        stack = [q for q, f in self.funcs.items() if f.is_root]
+        while stack:
+            q = stack.pop()
+            if q in seen:
+                continue
+            seen.add(q)
+            stack.extend(tgt for tgt, _ in self.funcs[q].calls
+                         if tgt not in seen)
+        return seen
+
+
+def _emit(report: Report, mod: ModuleInfo, rule: str, node: ast.AST,
+          message: str, severity: str = "error") -> None:
+    key = RULE_KEYS[rule]
+    line = getattr(node, "lineno", 0)
+    pragma = mod.pragmas.lookup(line, key)
+    report.findings.append(Finding(
+        rule=rule, key=key, file=mod.relpath, line=line,
+        col=getattr(node, "col_offset", 0), severity=severity,
+        message=message,
+        pragma="allowed" if pragma and pragma.justification else "none"))
+
+
+# --------------------------------------------------------------- R1
+
+def _check_r1(index: Index, report: Report) -> None:
+    reached = index.reachable()
+    for qual in sorted(reached):
+        fn = index.funcs[qual]
+        mod = fn.module
+        for node in Index._own_body(fn.node):
+            if isinstance(node, ast.Attribute):
+                chain = _qual_chain(node)
+                if chain is None:
+                    continue
+                base = index.resolve_module(mod, chain)
+                if base is None:
+                    continue
+                root_pkg = base.split(".")[0]
+                if root_pkg == "numpy" and \
+                        base.split(".")[-1] not in _NP_STATIC_ATTRS:
+                    _emit(report, mod, "R1", node,
+                          f"host numpy in traced code: `{chain}` is "
+                          f"reachable from a scan/tick root via {qual}")
+                elif root_pkg == "random":
+                    _emit(report, mod, "R1", node,
+                          f"stdlib random in traced code: `{chain}` "
+                          f"(reachable via {qual}) — use jax.random")
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "item" \
+                        and not node.args and not node.keywords:
+                    _emit(report, mod, "R1", node,
+                          ".item() forces a device sync inside traced "
+                          f"code (reachable via {qual})")
+                elif isinstance(f, ast.Name) and f.id in ("float", "int"):
+                    _emit(report, mod, "R1", node,
+                          f"`{f.id}()` coercion in traced code forces a "
+                          f"host round-trip (reachable via {qual})")
+                elif isinstance(f, ast.Name) and f.id == "print":
+                    _emit(report, mod, "R1", node,
+                          "print() in traced code runs at trace time "
+                          f"only / forces host callbacks (via {qual})")
+
+
+# --------------------------------------------------------------- R2
+
+def _check_r2(index: Index, report: Report) -> None:
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in ("float64", "double"):
+                chain = _qual_chain(node)
+                base = index.resolve_module(mod, chain) if chain else None
+                if base and base.split(".")[0] in ("numpy", "jax"):
+                    _emit(report, mod, "R2", node,
+                          f"`{chain}`: f64 dtype feeding simulator "
+                          "buffers (device programs are f32-only)")
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "dtype" and (
+                            isinstance(kw.value, ast.Name)
+                            and kw.value.id in ("float", "int")):
+                        _emit(report, mod, "R2", kw.value,
+                              f"dtype={kw.value.id} is platform f64/i64 "
+                              "— name an explicit 32-bit dtype")
+                    elif kw.arg == "dtype" and (
+                            isinstance(kw.value, ast.Constant)
+                            and kw.value.value == "float64"):
+                        _emit(report, mod, "R2", kw.value,
+                              'dtype="float64" feeding simulator '
+                              "buffers (device programs are f32-only)")
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "astype" \
+                        and node.args:
+                    a = node.args[0]
+                    if isinstance(a, ast.Name) and a.id in ("float",
+                                                            "int"):
+                        _emit(report, mod, "R2", node,
+                              f"astype({a.id}) widens to f64/i64 — "
+                              "name an explicit 32-bit dtype")
+
+
+# --------------------------------------------------------------- R3
+
+def _check_r3(index: Index, report: Report) -> None:
+    cfg_fields: Set[str] = set()
+    cfg_class: Optional[Tuple[ModuleInfo, ast.ClassDef]] = None
+    for qual, cls in index.classes.items():
+        if cls.name != "SMRConfig":
+            continue
+        mod = index.modules[qual.rsplit(".", 1)[0]]
+        cfg_class = (mod, cls)
+        frozen = False
+        for dec in cls.decorator_list:
+            if isinstance(dec, ast.Call) and \
+                    _qual_chain(dec.func) in ("dataclass",
+                                              "dataclasses.dataclass"):
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" and \
+                            isinstance(kw.value, ast.Constant):
+                        frozen = bool(kw.value.value)
+        if not frozen:
+            _emit(report, mod, "R3", cls,
+                  "SMRConfig must be @dataclass(frozen=True): only a "
+                  "hashable config can be a jit static argument")
+        for item in cls.body:
+            if isinstance(item, ast.AnnAssign) and \
+                    isinstance(item.target, ast.Name):
+                cfg_fields.add(item.target.id)
+                if isinstance(item.value, (ast.List, ast.Dict, ast.Set)):
+                    _emit(report, mod, "R3", item,
+                          f"SMRConfig.{item.target.id} has a mutable "
+                          "(unhashable) default — jit-static configs "
+                          "need hashable fields")
+    if cfg_class is None:
+        return
+    # is `cfg` declared jit-static anywhere?
+    static_ok = False
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "static_argnames":
+                        names = [e.value for e in ast.walk(kw.value)
+                                 if isinstance(e, ast.Constant)]
+                        if "cfg" in names:
+                            static_ok = True
+    if not static_ok:
+        mod, cls = cfg_class
+        _emit(report, mod, "R3", cls,
+              "no jit static_argnames declaration includes 'cfg' — "
+              "config-steered Python control flow would retrace or fail")
+    # cfg.<x> steering control flow in traced-reachable code must name a
+    # declared (static, hashable) SMRConfig field — but only where `cfg`
+    # actually binds an SMRConfig (own or enclosing-scope parameter
+    # annotation; other config families are out of scope)
+    def _binds_smr_cfg(fn: FuncInfo) -> bool:
+        qual = fn.qual
+        while qual in index.funcs:
+            node = index.funcs[qual].node
+            for a in node.args.args + node.args.kwonlyargs:
+                if a.arg != "cfg":
+                    continue
+                ann = a.annotation
+                if ann is None:
+                    return "SMRConfig" in fn.module.symbols or any(
+                        v.endswith(".SMRConfig")
+                        for v in fn.module.symbols.values())
+                name = ann.value if isinstance(ann, ast.Constant) \
+                    else _qual_chain(ann)
+                return bool(name) and str(name).split(".")[-1] == \
+                    "SMRConfig"
+            qual = qual.rsplit(".", 1)[0]
+        return False
+
+    reached = index.reachable()
+    for qual in sorted(reached):
+        fn = index.funcs[qual]
+        if not _binds_smr_cfg(fn):
+            continue
+        tests: List[ast.AST] = []
+        for node in Index._own_body(fn.node):
+            if isinstance(node, (ast.If, ast.While)):
+                tests.append(node.test)
+            elif isinstance(node, ast.IfExp):
+                tests.append(node.test)
+            elif isinstance(node, ast.Assert):
+                tests.append(node.test)
+        for test in tests:
+            for sub in ast.walk(test):
+                if isinstance(sub, ast.Attribute) and \
+                        isinstance(sub.value, ast.Name) and \
+                        sub.value.id == "cfg" and \
+                        sub.attr not in cfg_fields:
+                    _emit(report, fn.module, "R3", sub,
+                          f"cfg.{sub.attr} steers Python control flow "
+                          f"in traced code ({qual}) but is not a "
+                          "declared SMRConfig field — undeclared "
+                          "statics break the one-program contract")
+
+
+# --------------------------------------------------------------- R4
+
+def _check_r4(index: Index, report: Report) -> None:
+    for fn in index.funcs.values():
+        mod = fn.module
+        sends: List[ast.Call] = []
+        commits: List[ast.Call] = []
+        legacy: List[ast.Call] = []
+        for node in Index._own_body(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _qual_chain(node.func)
+            if chain is None:
+                continue
+            tail = chain.split(".")[-1]
+            tgt = index.resolve_call(fn, node)
+            if tgt:
+                tgt = tgt.rsplit(".__init__", 1)[0]
+            if tail == "Send" and tgt and tgt.split(".")[-1] == "Send":
+                sends.append(node)
+            elif tail == "ring_commit":
+                # only commits whose callee actually takes a drop mask:
+                # the kernel-level ops.ring_commit runs post-merge
+                callee = index.funcs.get(tgt) if tgt else None
+                if callee is None or any(
+                        a.arg == "drop" for a in
+                        callee.node.args.args + callee.node.args.kwonlyargs):
+                    commits.append(node)
+            elif tail == "send" and tgt and \
+                    tgt.split(".")[-1] == "send":
+                legacy.append(node)
+        for call in commits:
+            if not any(kw.arg == "drop" for kw in call.keywords):
+                _emit(report, mod, "R4", call,
+                      "ring_commit without drop= — sends bypass the "
+                      "scenario drop mask (silent-omission semantics)")
+        for call in legacy:
+            if not any(kw.arg == "drop" for kw in call.keywords):
+                _emit(report, mod, "R4", call,
+                      "channel.send without drop= — the env drop mask "
+                      "must thread through every send path")
+        if sends and not commits and not legacy:
+            _emit(report, mod, "R4", sends[0],
+                  "channel.Send constructed here but never committed "
+                  "via ring_commit(..., drop=...) in this function — "
+                  "the drop mask cannot thread through")
+
+
+# --------------------------------------------------------------- R5
+
+def _guard_mentions(mod: ModuleInfo, test: ast.AST, names: Set[str],
+                    guard_vars: Set[str]) -> bool:
+    for sub in ast.walk(test):
+        if isinstance(sub, ast.Name) and (sub.id in names
+                                          or sub.id in guard_vars):
+            return True
+        if isinstance(sub, ast.Call) and \
+                isinstance(sub.func, ast.Attribute) and \
+                sub.func.attr == "on":
+            return True
+    return False
+
+
+def _check_r5(index: Index, report: Report) -> None:
+    for fn in index.funcs.values():
+        mod = fn.module
+        optional_vars: Set[str] = set()
+        guard_vars: Set[str] = set()
+        init_calls: List[ast.Call] = []
+        for node in Index._own_body(fn.node):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call):
+                chain = _qual_chain(node.value.func) or ""
+                tail = chain.split(".")[-1]
+                tgt = [t.id for t in node.targets
+                       if isinstance(t, ast.Name)]
+                if tail in _LEVEL_INITS and tgt:
+                    optional_vars.update(tgt)
+                elif tail == "on" and tgt:
+                    guard_vars.update(tgt)
+            if isinstance(node, ast.Call):
+                chain = _qual_chain(node.func) or ""
+                if chain.split(".")[-1] in _LEVEL_INITS:
+                    init_calls.append(node)
+        if not optional_vars and not init_calls:
+            continue
+
+        def guarded(node: ast.AST, names: Set[str]) -> bool:
+            for anc in mod.ancestors(node):
+                if isinstance(anc, ast.IfExp) and \
+                        _guard_mentions(mod, anc.test, names, guard_vars):
+                    return True
+                if isinstance(anc, ast.If) and \
+                        _guard_mentions(mod, anc.test, names, guard_vars):
+                    return True
+                if isinstance(anc, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                    break
+            return False
+
+        for node in Index._own_body(fn.node):
+            # dict-literal values carrying the optional subtree
+            if isinstance(node, ast.Dict):
+                for v in node.values:
+                    stored = (isinstance(v, ast.Name)
+                              and v.id in optional_vars) or \
+                             (isinstance(v, ast.Call) and
+                              (_qual_chain(v.func) or "")
+                              .split(".")[-1] in _LEVEL_INITS)
+                    if stored and not guarded(node, optional_vars):
+                        _emit(report, mod, "R5", v,
+                              "level-gated subtree stored in a carry "
+                              "dict without a None/level guard — it "
+                              "would ride the scan carry even at off")
+            # subscript stores: st["tr"] = tr / = init_trace(...)
+            elif isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Subscript) for t in node.targets):
+                v = node.value
+                stored = (isinstance(v, ast.Name)
+                          and v.id in optional_vars) or \
+                         (isinstance(v, ast.Call) and
+                          (_qual_chain(v.func) or "")
+                          .split(".")[-1] in _LEVEL_INITS)
+                if stored and not guarded(node, optional_vars):
+                    _emit(report, mod, "R5", node,
+                          "level-gated subtree assigned into state "
+                          "without a None/level guard — it would ride "
+                          "the scan carry even at off")
+
+
+_CHECKS = {"R1": _check_r1, "R2": _check_r2, "R3": _check_r3,
+           "R4": _check_r4, "R5": _check_r5}
+
+
+def run_lint(root: Path, rules=None, rel_to: Optional[Path] = None) \
+        -> Report:
+    """Lint every ``*.py`` under ``root``; returns the Report (pragma
+    findings included). ``rules`` restricts to a subset of R1–R5."""
+    root = Path(root)
+    if rel_to is None:
+        rel_to = root.parents[1] if root.parent.name == "src" else root
+    index = Index(root, rel_to)
+    report = Report()
+    for rule in (rules or ALL_RULES):
+        _CHECKS[rule](index, report)
+    for mod in index.modules.values():
+        report.extend(mod.pragmas.pragma_findings())
+    return report

@@ -29,6 +29,9 @@ _RTT_MS = np.array([
     [  12,   85,  195,  125,  145,   50,    1,  200,  190],  # ohio
     [ 215,  175,   60,  325,   70,  165,  200,    1,   90],  # singapore
     [ 200,  260,  220,  310,  105,  140,  190,   90,    1],  # sydney
+    # lint: allow(dtype-hygiene): host-side RTT reference table kept in
+    # f64 for exact ms arithmetic; netsim.build_env downcasts to f32 at
+    # the device boundary
 ], dtype=np.float64)
 
 

@@ -146,6 +146,9 @@ class RingSpec:
 
     def fill(self) -> np.ndarray:
         """Per-field clear value [K]: merge-neutral of each field."""
+        # lint: allow(traced-purity): the ring layout is static — this
+        # numpy vector is built once per trace and constant-folds into
+        # the compiled program
         f = np.zeros((self.k,), np.float32)
         for c in self.channels:
             if not c.additive:

@@ -308,6 +308,8 @@ def _lower(cfg: SMRConfig, spec: SweepSpec, canonical: bool = True):
     wl_b = jax.tree.map(lambda *xs: np.stack(xs)[widx], *dev)
     # per-replica Poisson rate per tick, computed host-side in float64 so a
     # batched grid and a single run_sim see bit-identical inputs
+    # lint: allow(dtype-hygiene): deliberate f64 host math for grid /
+    # single-run bit-exactness; .astype(np.float32) before the device
     rate_b = (np.array([r for r, _, _, _ in lane_pts], np.float64)
               * cfg.tick_ms / 1000.0 / cfg.n_replicas).astype(np.float32)
     seed_b = np.array([s for _, s, _, _ in lane_pts], np.int32)

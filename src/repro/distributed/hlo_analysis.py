@@ -54,8 +54,11 @@ def _shape_bytes(shape_str: str) -> int:
 # ---------------------------------------------------------------------------
 
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+# result shape: a scalar/array shape, or a tuple (one nesting level deep —
+# while-carry tuples in optimized HLO are flat, tokens may nest once)
 _OP_LINE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\],{}*/]+?)\s+"
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[\w\[\],{}*/]+?)\s+"
     r"([\w\-]+)\((.*)$")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
 _CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
@@ -68,12 +71,32 @@ _FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
              "copy-done"}
 
 
+def _base_opcode(oc: str) -> str:
+    """Strip an async ``-start``/``-done`` SUFFIX (``str.rstrip`` strips a
+    character set and would eat 'all-gather-start' down to 'all-gathe')."""
+    for suf in ("-start", "-done"):
+        if oc.endswith(suf):
+            return oc[:-len(suf)]
+    return oc
+
+
 class _Op:
     __slots__ = ("name", "shape", "opcode", "rest", "line")
 
     def __init__(self, name, shape, opcode, rest, line):
         self.name, self.shape, self.opcode = name, shape, opcode
         self.rest, self.line = rest, line
+
+    def callees(self) -> List[str]:
+        """Computations this op invokes (while condition+body, call /
+        fusion targets, conditional branches)."""
+        out = re.findall(r"\b(?:calls|to_apply|condition|body)=%?"
+                         r"([\w.\-]+)", self.line)
+        for blk in re.findall(r"branch_computations=\{([^}]*)\}",
+                              self.line):
+            out.extend(nm.strip().lstrip("%") for nm in blk.split(",")
+                       if nm.strip())
+        return out
 
 
 def _parse_module(hlo_text: str):
@@ -217,8 +240,8 @@ def module_cost(hlo_text: str) -> Dict[str, object]:
             if is_ds:
                 byts += 2.0 * b_res
                 continue
-            if oc in COLLECTIVES or oc.rstrip("-start") in COLLECTIVES:
-                kind = oc.replace("-start", "")
+            if oc in COLLECTIVES or _base_opcode(oc) in COLLECTIVES:
+                kind = _base_opcode(oc)
                 if kind in COLLECTIVES and not oc.endswith("-done"):
                     coll_acc[kind]["count"] += mult
                     coll_acc[kind]["bytes"] += b_res * mult
@@ -242,7 +265,7 @@ def module_cost(hlo_text: str) -> Dict[str, object]:
                 tgt = _CALLS_RE.search(op.line)
                 if tgt:
                     _acc_coll(tgt.group(1), mult)
-            kind = oc.replace("-start", "")
+            kind = _base_opcode(oc)
             if kind in COLLECTIVES and not oc.endswith("-done"):
                 coll_acc[kind]["count"] += mult
                 coll_acc[kind]["bytes"] += _shape_bytes(op.shape) * mult
@@ -264,6 +287,104 @@ def module_cost(hlo_text: str) -> Dict[str, object]:
 def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
     """Per-collective-kind {count, bytes} (loop-aware)."""
     return module_cost(hlo_text)["collectives"]
+
+
+# ---------------------------------------------------------------------------
+# Program-audit queries (repro.analysis.hlo_lint): dtype census, while
+# topology, host-transfer detection
+# ---------------------------------------------------------------------------
+
+# custom-call targets that round-trip through the host (python callbacks,
+# host send/recv) — their presence inside the scan loop is the failure
+# class the flight-recorder/monitor levels were designed to avoid
+_HOST_CALL_MARKERS = ("callback", "host", "python", "py_func")
+_HOST_TRANSFER_OPCODES = {"infeed", "outfeed", "send", "recv",
+                          "send-done", "recv-done"}
+
+
+def dtype_op_counts(hlo_text: str) -> Dict[str, int]:
+    """Ops per result dtype across the module (tuple results count each
+    element). The f64 audit asserts ``dtype_op_counts(...)['f64'] == 0``."""
+    comps, _ = _parse_module(hlo_text)
+    out: Dict[str, int] = {}
+    for ops in comps.values():
+        for op in ops:
+            for dt, _dims in _SHAPE_RE.findall(op.shape):
+                out[dt] = out.get(dt, 0) + 1
+    return out
+
+
+def _comp_reach(comps, roots, through_while: bool):
+    """Computations reachable from ``roots`` via op callees; while
+    condition/body edges are followed only when ``through_while``."""
+    seen, stack = set(), list(roots)
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        for op in comps[name]:
+            if op.opcode == "while" and not through_while:
+                continue
+            stack.extend(c for c in op.callees() if c not in seen)
+    return seen
+
+
+def while_stats(hlo_text: str) -> List[Dict[str, object]]:
+    """Every ``while`` op in the module: its computation, body/condition
+    targets, ``known_trip_count``, and whether it is OUTER (reachable
+    from ENTRY without crossing another while). A fused scan compiles to
+    exactly one outer while; an unrolled or split scan does not."""
+    comps, entry = _parse_module(hlo_text)
+    outer_comps = _comp_reach(comps, [entry] if entry else [], False)
+    out: List[Dict[str, object]] = []
+    for cname, ops in comps.items():
+        for op in ops:
+            if op.opcode != "while":
+                continue
+            tm = _TRIP_RE.search(op.line)
+            body = _COND_BODY_RE.search(op.line)
+            out.append({
+                "name": op.name,
+                "comp": cname,
+                "body": body.group(1) if body else None,
+                "trip_count": int(tm.group(1)) if tm else None,
+                "outer": cname in outer_comps,
+            })
+    return out
+
+
+def loop_computations(hlo_text: str):
+    """The set of computations that execute inside some while loop."""
+    comps, _ = _parse_module(hlo_text)
+    bodies = []
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode == "while":
+                bodies.extend(op.callees())
+    return _comp_reach(comps, bodies, True)
+
+
+def host_transfer_ops(hlo_text: str) -> List[Dict[str, object]]:
+    """Host round-trips in the module: infeed/outfeed/send/recv ops and
+    custom-calls targeting python/host callbacks, each tagged with
+    whether it sits inside a while loop (``in_loop``) — the audit asserts
+    none do."""
+    comps, _ = _parse_module(hlo_text)
+    in_loop = loop_computations(hlo_text)
+    out: List[Dict[str, object]] = []
+    for cname, ops in comps.items():
+        for op in ops:
+            oc = op.opcode
+            hit = oc in _HOST_TRANSFER_OPCODES
+            if oc == "custom-call":
+                m = re.search(r'custom_call_target="([^"]*)"', op.line)
+                target = (m.group(1) if m else "").lower()
+                hit = any(k in target for k in _HOST_CALL_MARKERS)
+            if hit:
+                out.append({"opcode": oc, "name": op.name, "comp": cname,
+                            "in_loop": cname in in_loop})
+    return out
 
 
 def total_collective_bytes(hlo_text: str) -> float:

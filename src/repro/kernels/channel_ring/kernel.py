@@ -75,6 +75,8 @@ def ring_commit_tpu(buf: jax.Array, t: jax.Array, fill: jax.Array,
     bs = min(bs, d)
     while d % bs:
         bs //= 2
+    # lint: allow(traced-purity): coercing the static EntryLayout to
+    # hashable Python ints for pallas_call closure — trace-time only
     layout = tuple((int(o), int(w), int(f), bool(a)) for o, w, f, a in layout)
     kernel = functools.partial(_commit_kernel, bs=bs, d=d, layout=layout)
     buf_spec = pl.BlockSpec((bs, n, n, k), lambda i: (i, 0, 0, 0))

@@ -48,20 +48,27 @@ def _scatter_args(entries: Sequence[Entry], layout: Sequence[EntryLayout]):
                                                                 layout):
         if additive:
             sa.append(jnp.broadcast_to(slot[..., None], vals.shape))
+            # lint: allow(traced-purity): field indices come from the
+            # static EntryLayout — trace-time constants, not host data
             fa.append(np.arange(off, off + w))
             va.append(vals)
             sm.append(slot[..., None])
+            # lint: allow(traced-purity): static EntryLayout flag index
             fm.append(np.array([flag_off]))
             vm.append(flag[..., None])
         else:
             # payload + flag are contiguous: one [n, n, w+1] block
             sm.append(jnp.broadcast_to(slot[..., None],
                                        slot.shape + (w + 1,)))
+            # lint: allow(traced-purity): static EntryLayout field span
             fm.append(np.arange(off, off + w + 1))
             vm.append(jnp.concatenate([vals, flag[..., None]], axis=-1))
     cat = lambda xs: jnp.concatenate(xs, axis=-1)  # noqa: E731
+    # lint: allow(traced-purity): concatenating the static index vectors
+    # stays host-side; only jnp.asarray crosses to the device
     out = (cat(sm), jnp.asarray(np.concatenate(fm), jnp.int32), cat(vm))
     if sa:
+        # lint: allow(traced-purity): static index vector (see above)
         return out + (cat(sa), jnp.asarray(np.concatenate(fa), jnp.int32),
                       cat(va))
     return out + (None, None, None)

@@ -32,6 +32,8 @@ def init_moe(cfg: ModelConfig, key):
 
 
 def _capacity(group_size: int, n_experts: int, top_k: int, factor: float) -> int:
+    # lint: allow(traced-purity): static expert-capacity math on Python
+    # ints at trace time — shapes, not traced values
     c = int(group_size * top_k / n_experts * factor)
     return max(4, -(-c // 4) * 4)      # round up to multiple of 4
 

@@ -59,6 +59,11 @@ def make_entry(suites: Dict[str, Dict], quick: bool,
                               "violations": dict(mon.get("violations", {})),
                               "level": mon.get("level"),
                               "points": mon.get("points")}
+        # static-analysis rule counts (repro.analysis): active findings
+        # per rule at the time of the run, so lint debt is a trajectory
+        ana = s.get("analysis")
+        if isinstance(ana, dict):
+            row["analysis"] = {str(k): int(v) for k, v in ana.items()}
         out_suites[name] = row
     return {"schema": SCHEMA_VERSION, "git_sha": str(git_sha),
             "timestamp": float(timestamp), "quick": bool(quick),
@@ -96,6 +101,12 @@ def validate_entry(entry: Dict) -> Dict:
             if mon["ok"] and any(mon["violations"].values()):
                 raise ValueError(
                     f"suite {name!r} monitor ok=True with violations")
+        ana = s.get("analysis")
+        if ana is not None:
+            if not isinstance(ana, dict) or not all(
+                    isinstance(v, int) for v in ana.values()):
+                raise ValueError(f"suite {name!r} analysis block must "
+                                 "map rule -> int count")
     return entry
 
 

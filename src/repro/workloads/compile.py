@@ -81,6 +81,8 @@ def lower(cfg: SMRConfig, wl, pad_windows: Optional[int] = None) -> Tables:
     win_start = _win_starts(cfg, wl)
     w = len(win_start)
     tab: dict = {
+        # lint: allow(dtype-hygiene): the paint buffer is f64 so
+        # primitive stacking is bit-stable; cast to f32 below
         "rate_of": np.ones((w, n), np.float64),
         "closed": False,
         "think_ticks": 1.0,

@@ -1,0 +1,29 @@
+"""Known-good idioms: every rule has something here it must NOT flag."""
+import numpy as np
+
+
+class Send:
+    pass
+
+
+def ring_commit(ring, sends, drop=None):
+    return ring, sends, drop
+
+
+# lint: traced-root
+def tick(state):
+    # lint: allow(traced-purity): static layout table folded at trace time
+    lanes = np.arange(4)
+    return state, lanes
+
+
+def relay(ring, inbox, drop):
+    msgs = [Send() for _ in inbox]
+    return ring_commit(ring, msgs, drop=drop)
+
+
+def make_state(level, base):
+    tr = init_trace(level)  # noqa: F821 — parsed, never imported
+    if tr is not None:
+        return {"base": base, "tr": tr}
+    return {"base": base}

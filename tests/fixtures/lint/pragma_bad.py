@@ -1,0 +1,7 @@
+"""P0: a pragma without a justification is itself a finding."""
+import numpy as np
+
+
+# lint: allow(traced-purity)
+def helper(x):  # expect: P0
+    return np.log(x)

@@ -1,0 +1,8 @@
+"""R1 traced-purity: host numpy reachable from a traced root."""
+import numpy as np
+
+
+# lint: traced-root
+def body(state, msg):
+    acc = np.sum(state)  # expect: R1
+    return acc, msg

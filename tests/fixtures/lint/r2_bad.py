@@ -1,0 +1,6 @@
+"""R2 dtype-hygiene: f64 creep toward simulator buffers."""
+import numpy as np
+
+
+def widen(x):
+    return np.asarray(x, dtype=np.float64)  # expect: R2

@@ -1,0 +1,23 @@
+"""R3 static-args: undeclared SMRConfig field steering control flow."""
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+
+
+@dataclass(frozen=True)
+class SMRConfig:
+    n_replicas: int = 5
+    sim_seconds: float = 2.0
+
+
+_jit = partial(jax.jit, static_argnames=("protocol", "cfg"))
+
+
+# lint: traced-root
+def step(cfg: SMRConfig, state):
+    if cfg.batch_pipelining:  # expect: R3
+        return state * 2
+    if cfg.n_replicas > 3:
+        return state
+    return state + 1

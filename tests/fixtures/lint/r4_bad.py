@@ -1,0 +1,16 @@
+"""R4 drop-mask: Send constructed, committed without the drop mask."""
+
+
+class Send:
+    def __init__(self, dst, payload):
+        self.dst = dst
+        self.payload = payload
+
+
+def ring_commit(ring, sends, drop=None):
+    return ring, sends, drop
+
+
+def relay(ring, inbox):
+    msgs = [Send(1, m) for m in inbox]
+    return ring_commit(ring, msgs)  # expect: R4

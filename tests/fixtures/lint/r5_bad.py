@@ -1,0 +1,6 @@
+"""R5 carry-hygiene: level-gated subtree stored without a guard."""
+
+
+def make_state(level, base):
+    tr = init_trace(level)  # noqa: F821 — parsed, never imported
+    return {"base": base, "tr": tr}  # expect: R5

@@ -1,0 +1,157 @@
+"""Tracelint tests: the fixture corpus (each AST rule trips exactly once
+at the marked span), pragma semantics, the repo-clean self-check, the
+baseline round-trip, CLI exit codes, and a warm-cache HLO audit.
+
+The corpus under ``tests/fixtures/lint/`` carries ``# expect: <RULE>``
+markers on the lines each rule must flag — the tests derive the expected
+(file, line) spans from those markers so fixture edits can't silently
+drift from the assertions.
+"""
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import format_table, run_lint
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.findings import PragmaTable, findings_from_json
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint"
+SRC_REPRO = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+_EXPECT_RE = re.compile(r"#\s*expect:\s*(\w+)")
+
+
+def _expected_spans():
+    """{(rule, file): line} from the corpus ``# expect:`` markers."""
+    out = {}
+    for path in sorted(FIXTURES.glob("*.py")):
+        for lineno, text in enumerate(path.read_text().splitlines(), 1):
+            m = _EXPECT_RE.search(text)
+            if m:
+                out[(m.group(1), path.name)] = lineno
+    return out
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return run_lint(FIXTURES)
+
+
+def test_every_marked_span_trips_exactly_once(corpus):
+    expected = _expected_spans()
+    assert expected, "fixture corpus has no # expect: markers"
+    active = [(f.rule, f.file, f.line) for f in corpus.active]
+    for (rule, fname), line in expected.items():
+        hits = [a for a in active if a[0] == rule and a[1] == fname]
+        assert hits == [(rule, fname, line)], \
+            f"{rule} in {fname}: expected one finding at line {line}, " \
+            f"got {hits}"
+    # and nothing beyond the marked spans is active
+    assert len(active) == len(expected), active
+
+
+def test_rules_trip_only_in_their_fixture(corpus):
+    for rule in ("R1", "R2", "R3", "R4", "R5"):
+        files = {f.file for f in corpus.active if f.rule == rule}
+        assert files == {f"{rule.lower()}_bad.py"}, (rule, files)
+
+
+def test_good_file_clean_with_one_allowed_pragma(corpus):
+    good = [f for f in corpus.findings if f.file == "good.py"]
+    assert not [f for f in good if f.active]
+    allowed = [f for f in good if f.pragma == "allowed"]
+    assert len(allowed) == 1 and allowed[0].rule == "R1"
+
+
+def test_unjustified_pragma_is_a_finding(corpus):
+    p0 = [f for f in corpus.active if f.rule == "P0"]
+    assert len(p0) == 1 and p0[0].file == "pragma_bad.py"
+
+
+def test_rule_subset_runs_only_those_rules():
+    report = run_lint(FIXTURES, rules=("R2",))
+    rules = {f.rule for f in report.active}
+    assert rules == {"R2", "P0"}  # pragma findings always reported
+
+
+def test_repo_is_clean():
+    """The self-check ISSUE 9 gates on: src/repro lints with zero active
+    findings, and every suppression carries a justification."""
+    report = run_lint(SRC_REPRO)
+    assert report.active == [], "\n".join(format_table(report.active))
+    for f in report.findings:
+        assert f.pragma == "allowed", f
+
+
+def test_pragma_table_same_line_and_comment_above():
+    src = ("x = 1  # lint: allow(dtype-hygiene): same-line case\n"
+           "# lint: allow(drop-mask): comment-above case\n"
+           "y = 2\n"
+           "# lint: allow(carry-hygiene)\n"
+           "z = 3\n")
+    t = PragmaTable(src, "t.py")
+    assert t.lookup(1, "dtype-hygiene").justification
+    assert t.lookup(3, "drop-mask").justification
+    assert t.lookup(3, "dtype-hygiene") is None   # key must match
+    p0 = t.pragma_findings()
+    assert len(p0) == 1 and p0[0].line == 5       # unjustified one
+
+
+def test_baseline_roundtrip(tmp_path, corpus):
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps(corpus.baseline_json()))
+    fresh = run_lint(FIXTURES)
+    from repro.analysis.findings import load_baseline
+    fresh.apply_baseline(load_baseline(base))
+    assert fresh.active == []
+    assert sum(1 for f in fresh.findings
+               if f.pragma == "baselined") == len(corpus.active)
+
+
+def test_cli_exit_codes_and_json_artifact(tmp_path, capsys):
+    art = tmp_path / "findings.json"
+    rc = cli_main(["--root", str(FIXTURES), "--quiet",
+                   "--json", str(art)])
+    assert rc == 1  # corpus has active findings
+    findings = findings_from_json(json.loads(art.read_text()))
+    assert sum(1 for f in findings if f.active) == 6
+    # baselining every active finding turns the run green
+    base = tmp_path / "base.json"
+    assert cli_main(["--root", str(FIXTURES), "--quiet",
+                     "--update-baseline", str(base)]) == 0
+    assert cli_main(["--root", str(FIXTURES), "--quiet",
+                     "--baseline", str(base)]) == 0
+    # the repo itself is the CLI's default root and must be green
+    assert cli_main(["--quiet"]) == 0
+    capsys.readouterr()
+
+
+def test_hlo_audit_single_protocol(tmp_path):
+    """End-to-end layer 2 on one protocol at the canonical --quick length
+    (warm .jax_cache in CI; the in-process jit cache covers reruns)."""
+    from repro.analysis import hlo_lint
+    from repro.obs import history
+
+    verdict = hlo_lint.audit(protocols=("mandator", "epaxos"),
+                             sim_seconds=2.0)
+    assert verdict["ok"], verdict["violations"]
+    m = verdict["protocols"]["mandator"]
+    assert m["f64_ops"] == 0
+    assert m["host_transfers_in_loop"] == 0
+    assert m["scan_whiles"] == 1
+    assert verdict["protocols"]["epaxos"]["program"] is None
+    for sigs in verdict["signatures"].values():
+        assert len(sigs) == 1           # H4: one signature per mode
+    # verdict rides the history ledger and gates like a monitor verdict
+    ledger = tmp_path / "hist.jsonl"
+    hlo_lint.append_history(ledger, verdict,
+                            analysis_counts={"active": 0})
+    (entry,) = history.load(ledger)
+    suite = entry["suites"]["hlo-audit"]
+    assert suite["monitor"]["ok"] is True
+    assert suite["monitor"]["level"] == "hlo"
+    assert suite["analysis"] == {"active": 0}
+    cmp_res = history.compare(None, entry)
+    assert cmp_res["hlo-audit"]["status"] == "ok"
