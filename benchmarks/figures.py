@@ -319,6 +319,96 @@ def workload_matrix(sim_seconds: float = 4.0) -> List[Row]:
     return rows
 
 
+def scaling_curve(sim_seconds: float = 0.25, n_points: int = 1024,
+                  device_counts=None) -> List[Row]:
+    """Points/sec-vs-devices curve of the mesh-sharded sweep engine
+    (ISSUE 10 / ROADMAP "millions of users" axis): one
+    workload × scenario × rate × seed grid of ``n_points`` points, run
+    through ``dispatch_sweep(mesh=...)`` at each device count. On a
+    stock CPU runner this needs
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in the
+    environment (before jax initializes) to expose >1 host device.
+
+    The suite is also the sharded-parity gate: per-point scalar metrics
+    must be BITWISE identical across every device count and against the
+    legacy per-point dispatch path (checked on the grid's first
+    rate × seed slice) — any drift raises, failing the suite and CI."""
+    from repro.core import experiment
+    from repro.distributed import mesh as dmesh
+
+    proto = "mandator-sporades"
+    cfg = _cfg(sim_seconds=sim_seconds)
+    wlib = workload_library.workloads(sim_seconds, cfg.n_replicas)
+    slib = scenario_library.scenarios(sim_seconds, cfg.n_replicas)
+    workloads = tuple(wlib[w] for w in ("poisson-open", "onoff-burst",
+                                        "diurnal", "flash-crowd"))
+    scens = (slib["baseline"], slib["paper-ddos"])
+    n_rates = max(1, n_points // (16 * len(workloads) * len(scens)))
+    rates = tuple(np.linspace(50_000, 400_000, n_rates))
+    seeds = tuple(range(max(1, n_points
+                            // (n_rates * len(workloads) * len(scens)))))
+    spec = SweepSpec(rates=rates, seeds=seeds, scenarios=scens,
+                     workloads=workloads)
+    if device_counts is None:
+        device_counts = dmesh.device_counts()
+    import time as _time
+    rows: List[Row] = []
+    curve = []
+    baseline = None
+    scalar_keys = ("throughput", "median_ms", "p99_ms", "committed")
+    same = lambda a, b: a == b or (np.isnan(a) and np.isnan(b))  # noqa: E731
+    for d in device_counts:
+        t0 = _time.perf_counter()
+        pending = dispatch_sweep(proto, cfg, spec, mesh=dmesh.grid_mesh(d))
+        t_dispatch = _time.perf_counter() - t0
+        t1 = _time.perf_counter()
+        res = pending.collect()
+        t_run = _time.perf_counter() - t1
+        wall = t_dispatch + t_run
+        if baseline is None:
+            baseline = res
+        else:
+            for i, (a, b) in enumerate(zip(baseline, res)):
+                for k in scalar_keys:
+                    if not same(a[k], b[k]):
+                        raise AssertionError(
+                            f"sharded parity broke: point {i} {k}: "
+                            f"d=1 {a[k]!r} vs d={d} {b[k]!r}")
+        curve.append({"devices": int(d), "points": spec.size,
+                      "dispatch_s": round(t_dispatch, 3),
+                      "run_s": round(t_run, 3), "wall_s": round(wall, 3),
+                      "points_per_s": round(spec.size / max(t_run, 1e-9),
+                                            1)})
+        rows.append(_row(f"scaling/d={d}", 0.0, points=spec.size,
+                         run_s=round(t_run, 2),
+                         pts_per_s=round(spec.size / max(t_run, 1e-9))))
+    # legacy-vs-sharded parity on the grid's first rate x seed slice
+    # (the full grid through the per-point loop would dwarf the suite)
+    sub = SweepSpec(rates=rates[:1], seeds=seeds[:1], scenarios=scens,
+                    workloads=workloads)
+    legacy = dispatch_sweep(proto, cfg, sub).collect()
+    for i, (a, b) in enumerate(zip(legacy, baseline)):
+        for k in scalar_keys:
+            if not same(a[k], b[k]):
+                raise AssertionError(
+                    f"sharded-vs-legacy parity broke: point {i} {k}: "
+                    f"legacy {a[k]!r} vs sharded {b[k]!r}")
+    block = {"protocol": proto, "sim_seconds": sim_seconds,
+             "grid": {"rates": len(rates), "seeds": len(seeds),
+                      "scenarios": len(scens),
+                      "workloads": len(workloads)},
+             "sketch_bins": int(np.asarray(
+                 baseline[0]["sketch"]["v"]).shape[0]),
+             "parity": "bitwise", "curve": curve}
+    (ART / "scaling.json").write_text(json.dumps(block, indent=1))
+    SCALING["scaling"] = block
+    return rows
+
+
+# run.py pops this into the scaling suite's BENCH_core.json entry
+SCALING: dict = {}
+
+
 def paper_comparison() -> List[Row]:
     """Summarize sim-vs-paper headline numbers (fills EXPERIMENTS.md)."""
     rows: List[Row] = []

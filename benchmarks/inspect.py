@@ -101,6 +101,38 @@ def print_analysis(path) -> None:
     print()
 
 
+def print_scaling(path) -> None:
+    """Render a mesh-sharded scaling curve as the points/sec-vs-devices
+    table with the per-device-count compile/run split. Accepts either the
+    ``benchmarks/artifacts/scaling.json`` artifact or a BENCH_core.json
+    (whose ``scaling`` suite embeds the same block)."""
+    data = json.loads(Path(path).read_text())
+    entry = data.get("suites", {}).get("scaling", data)
+    block = entry.get("scaling", entry)
+    curve = block.get("curve")
+    if not curve:
+        print(f"== no scaling curve in {path} ==")
+        return
+    grid = block.get("grid", {})
+    gdesc = " x ".join(f"{v} {k}" for k, v in grid.items()) or "?"
+    print(f"== mesh-sharded scaling curve ({path}) ==")
+    print(f" protocol {block.get('protocol', '?')}, "
+          f"{curve[0].get('points', '?')} points ({gdesc}), "
+          f"sim {block.get('sim_seconds', '?')}s, "
+          f"sketch bins {block.get('sketch_bins', '?')}, "
+          f"parity {block.get('parity', '?')}")
+    hdr = (f" {'devices':>8} {'dispatch_s':>11} {'run_s':>8} "
+           f"{'wall_s':>8} {'points/s':>10} {'speedup':>8}")
+    print(hdr)
+    base = curve[0].get("points_per_s") or 1.0
+    for c in curve:
+        print(f" {c['devices']:>8} {c.get('dispatch_s', 0.0):>11.3f} "
+              f"{c.get('run_s', 0.0):>8.3f} {c.get('wall_s', 0.0):>8.3f} "
+              f"{c.get('points_per_s', 0.0):>10.1f} "
+              f"{c.get('points_per_s', 0.0) / base:>7.2f}x")
+    print()
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="run one traced sweep point and export a "
@@ -129,8 +161,15 @@ def main(argv=None) -> None:
                     help="print the tracelint findings table from a "
                          "`python -m repro.analysis --json PATH` artifact "
                          "before the point run (composes with --health)")
+    ap.add_argument("--scaling", default="", metavar="PATH",
+                    help="print the mesh-sharded points/sec-vs-devices "
+                         "table from a benchmarks/artifacts/scaling.json "
+                         "or BENCH_core.json, then exit")
     ap.add_argument("--no-compile-cache", action="store_true")
     args = ap.parse_args(argv)
+    if args.scaling:
+        print_scaling(args.scaling)
+        return
     if args.analysis:
         print_analysis(args.analysis)
     if args.no_compile_cache:

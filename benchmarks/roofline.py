@@ -104,6 +104,51 @@ def channel_hlo_block(dmax: int = 256, ticks: int = 200) -> dict:
     return block
 
 
+def sweep_hlo_block(sim_seconds: float = 0.25,
+                    protocol: str = "mandator-sporades") -> dict:
+    """Where does the packed ring kernel sit now that run time matters?
+    Lower the canonical single-lane sweep program (the unit of work every
+    grid point executes, sharded or not) and attribute its HBM traffic by
+    opcode with the loop-aware ``distributed/hlo_analysis.opcode_cost``
+    walker. The packed channel ring shows up as the
+    ``dynamic-update-slice`` scatter; its byte share is the headline
+    number. benchmarks/run.py drops this block into the scaling suite's
+    BENCH_core.json entry."""
+    from functools import partial
+
+    import jax
+
+    from repro.configs.smr import SMRConfig
+    from repro.core import experiment
+    from repro.distributed import hlo_analysis as ha
+
+    cfg = SMRConfig(sim_seconds=sim_seconds)
+    spec = experiment.SweepSpec(rates=(200_000.0,))
+    _, cfg, mode, env_b, wl_b, rate_b, seed_b, sig = experiment._lower(
+        cfg, spec)
+    fn = partial(experiment._sweep_body, protocol, cfg, mode)
+    compiled = jax.jit(fn).lower(env_b, wl_b, rate_b, seed_b).compile()
+    hlo = compiled.as_text()
+    cost = ha.module_cost(hlo)
+    ops = ha.opcode_cost(hlo)
+    total = sum(d["bytes"] for d in ops.values()) or 1.0
+    ring = ops.get("dynamic-update-slice", {"count": 0.0, "bytes": 0.0})
+    top = sorted(ops.items(), key=lambda kv: -kv[1]["bytes"])[:8]
+    return {
+        "protocol": protocol, "signature": repr(sig),
+        "sim_seconds": sim_seconds,
+        "hbm_bytes": float(cost["bytes"]),
+        "flops": float(cost["flops"]),
+        "ring_scatter": {"count": float(ring["count"]),
+                         "bytes": float(ring["bytes"]),
+                         "byte_share": round(ring["bytes"] / total, 4)},
+        "top_opcodes": [{"opcode": k, "count": float(d["count"]),
+                         "bytes": float(d["bytes"]),
+                         "byte_share": round(d["bytes"] / total, 4)}
+                        for k, d in top],
+    }
+
+
 def summary(mesh: str = "single") -> dict:
     recs = [r for r in load(mesh) if "skipped" not in r]
     doms = {}

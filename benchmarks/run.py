@@ -50,6 +50,52 @@ REPO = Path(__file__).resolve().parents[1]
 _EXTRA: dict = {}
 
 
+def sanitize_entry(entry: dict) -> dict:
+    """Report-layer hygiene for one BENCH_core suite entry. The cache
+    counters clamp per event inside compile_cache, but entries written by
+    OLDER revisions (merged back in by partial ``--only`` runs) can still
+    carry a negative ``cache_saved_s`` — clamp here too so the tracked
+    file never shows negative savings regardless of which revision wrote
+    the stale entry."""
+    e = dict(entry)
+    if "cache_saved_s" in e:
+        try:
+            e["cache_saved_s"] = round(max(float(e["cache_saved_s"]), 0.0),
+                                       3)
+        except (TypeError, ValueError):
+            pass
+    return e
+
+
+def merge_suites(prev: dict, current: dict) -> dict:
+    """Fold this run's suite entries over a previous BENCH_core.json
+    (partial ``--only`` runs update just the suites they ran), sanitizing
+    BOTH sides at the merge layer."""
+    merged: dict = {}
+    if isinstance(prev, dict):
+        for n, e in (prev.get("suites") or {}).items():
+            if isinstance(e, dict):
+                merged[n] = sanitize_entry(e)
+    for n, e in current.items():
+        merged[n] = sanitize_entry(e)
+    return merged
+
+
+def _scaling_suite(quick: bool) -> list:
+    """Mesh-sharded sweep engine curve (figures.scaling_curve): ~10^3
+    points through ``dispatch_sweep(mesh=...)`` per available device
+    count. Multi-device on CPU requires
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 in the job env."""
+    rows = figures.scaling_curve(sim_seconds=0.25 if quick else 0.5)
+    _EXTRA["scaling"] = {
+        "scaling": figures.SCALING.pop("scaling"),
+        # opcode-level HBM attribution of the per-point program (where the
+        # packed ring scatter sits now that run time is the bottleneck)
+        "sweep_hlo": roofline.sweep_hlo_block(0.25 if quick else 0.5),
+    }
+    return rows
+
+
 def _channel_suite() -> list:
     rows = bench_channel()
     art = {r[0]: {"us_per_tick": r[1], "derived": r[2]} for r in rows}
@@ -123,6 +169,7 @@ def main() -> None:
         "fig9": lambda: figures.fig9_scalability(max(sim_s - 1, 2.0)),
         "robustness": lambda: figures.robustness(sim_s),
         "workload-matrix": lambda: figures.workload_matrix(sim_s),
+        "scaling": lambda: _scaling_suite(args.quick),
         "paper": figures.paper_comparison,
         "kernels": kernel_bench,
         "channel": _channel_suite,
@@ -182,7 +229,7 @@ def main() -> None:
             "xla_compile_s": round(cache_d["backend_compile_s"], 3),
             "cache_hits": cache_d["persistent_cache_hits"],
             "cache_misses": cache_d["persistent_cache_misses"],
-            "cache_saved_s": round(cache_d["compile_saved_s"], 3),
+            "cache_saved_s": round(max(cache_d["compile_saved_s"], 0.0), 3),
         }
         if not stats:
             entry["compile_s"] = entry["xla_compile_s"]
@@ -225,9 +272,7 @@ def main() -> None:
     if bench_path.exists():
         try:
             prev = json.loads(bench_path.read_text())
-            merged = prev.get("suites", {})
-            merged.update(bench_core["suites"])
-            bench_core["suites"] = merged
+            bench_core["suites"] = merge_suites(prev, bench_core["suites"])
         except (json.JSONDecodeError, AttributeError):
             pass
     bench_path.write_text(json.dumps(bench_core, indent=1) + "\n")

@@ -70,6 +70,7 @@ import numpy as np
 from repro import workloads as wlc
 from repro.configs.smr import SMRConfig
 from repro.core import compile_cache, harness, netsim
+from repro.distributed import mesh as dmesh
 
 ANALYTIC_PROTOCOLS = ("epaxos", "rabia")
 
@@ -82,7 +83,13 @@ ANALYTIC_PROTOCOLS = ("epaxos", "rabia")
 # indexed past the real count) to a power-of-two floor so a baseline
 # (W=1) and a crash schedule (W=3) share one program.
 CANONICAL_LANES = 1
-CANONICAL_MIN_WINDOWS = 8
+# Window-table floor of 32 rows covers every library scenario and workload
+# at both --quick (2s) and full (4s) sim lengths (gray-wan tops out at 30
+# windows at 4s), so the fig suites AND the robustness matrix lower to the
+# same scenario-window axis — one compiled program instead of a per-suite
+# shape split (the robustness suite previously missed the cache on a
+# 16-row variant).
+CANONICAL_MIN_WINDOWS = 32
 
 _TRACE_COUNTS: Dict[str, int] = {}
 _TIMING: Dict[str, Dict[str, float]] = {}
@@ -119,6 +126,7 @@ def reset_trace_counts() -> None:
     cache itself is untouched — a reused program still counts 0 traces)."""
     _TRACE_COUNTS.clear()
     _SIGNATURES.clear()
+    _SHARD_SIGNATURES.clear()
 
 
 def program_signatures() -> Dict[str, tuple]:
@@ -252,6 +260,61 @@ def _acquire_program(protocol: str, cfg: SMRConfig, mode: wlc.WorkloadMode,
     return fn
 
 
+# mesh-sharded sweep programs, memoized per (protocol, statics, mesh):
+# shard_map closures are fresh objects per call, so without this cache
+# every dispatch would re-trace
+_SHARDED: Dict[tuple, "jax.stages.Wrapped"] = {}
+_SHARD_SIGNATURES: Dict[str, set] = {}
+
+
+def shard_signatures() -> Dict[str, tuple]:
+    """Distinct (ProgramSignature, devices) pairs dispatched through the
+    sharded path per protocol since the last ``reset_trace_counts()``."""
+    return {p: tuple(sorted(s)) for p, s in _SHARD_SIGNATURES.items()}
+
+
+def _acquire_sharded(protocol: str, cfg: SMRConfig, mode: wlc.WorkloadMode,
+                     mesh: "jax.sharding.Mesh"):
+    """The mesh-sharded sweep program: the padded grid's leading axis is
+    sharded over the 1-D ``("grid",)`` mesh and each device runs a
+    ``jax.lax.map`` of the SAME single-lane point computation the
+    canonical per-point path vmaps (``harness.sim_point`` with
+    ``reduced=True``) — so per-point results are bitwise identical to the
+    legacy dispatch loop while metrics reduce to O(sketch) bytes per
+    point ON DEVICE before any host transfer. Tracing is counted in
+    ``_TRACE_COUNTS`` like every other sweep program (the body runs only
+    at trace time)."""
+    key = (protocol, repr(cfg), repr(mode),
+           tuple(d.id for d in mesh.devices.flat))
+    fn = _SHARDED.get(key)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    def body(env_b, wl_b, rate_b, seed_b):
+        _TRACE_COUNTS[protocol] = _TRACE_COUNTS.get(protocol, 0) + 1
+
+        def one(point):
+            env, wlt, rate, seed = point
+            # one canonical lane per point: lift to the [1]-wide batch the
+            # canonical program uses, then strip the lane axis
+            out = jax.vmap(lambda e, w, r, s: harness.sim_point(
+                protocol, cfg, e, r, s, w, mode, reduced=True))(
+                jax.tree.map(lambda x: x[None], env),
+                jax.tree.map(lambda x: x[None], wlt),
+                rate[None], seed[None])
+            return jax.tree.map(lambda x: x[0], out)
+
+        return jax.lax.map(one, (env_b, wl_b, rate_b, seed_b))
+
+    spec = PartitionSpec(dmesh.GRID_AXIS)
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,
+                           check_rep=False))
+    _SHARDED[key] = fn
+    return fn
+
+
 def _lower(cfg: SMRConfig, spec: SweepSpec, canonical: bool = True):
     """Flatten the grid to stacked per-point inputs (env leaves, workload
     table leaves, rate, seed) plus the static workload mode and the
@@ -330,12 +393,13 @@ class PendingSweep:
     overlap is most of a fig suite's wall-clock."""
 
     def __init__(self, protocol: str, *, results: List[Dict] = None,
-                 pts=None, wl_names=None, outs=None):
+                 pts=None, wl_names=None, outs=None, n_real=None):
         self.protocol = protocol
         self._results = results   # analytic protocols resolve eagerly
         self._pts = pts
         self._wl_names = wl_names
         self._outs = outs         # async device-array trees, one per chunk
+        self._n_real = n_real     # sharded path: real points before padding
 
     def collect(self) -> List[Dict]:
         if self._results is not None:
@@ -346,6 +410,10 @@ class PendingSweep:
         # nested subtrees (per-layer obs rings), not just flat arrays
         out = (chunks[0] if len(chunks) == 1 else
                jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *chunks))
+        if self._n_real is not None:
+            # sharded decode: drop the rows that padded the grid to a
+            # multiple of the mesh size (repeats of the last real point)
+            out = jax.tree.map(lambda x: x[:self._n_real], out)
         stats = _TIMING[self.protocol]
         stats["run_s"] += time.perf_counter() - t0
         self._outs = None
@@ -357,18 +425,20 @@ class PendingSweep:
                        "throughput": float(out["throughput"][i]),
                        "median_ms": float(out["median_ms"][i]),
                        "p99_ms": float(out["p99_ms"][i]),
-                       "committed": float(out["committed"][i]),
-                       "timeline": out["timeline"][i],
-                       "origin_median_ms": out["origin_median_ms"][i],
-                       "origin_p99_ms": out["origin_p99_ms"][i],
-                       "origin_timeline": out["origin_timeline"][i],
-                       "origin_lat_ms_timeline":
-                           out["origin_lat_ms_timeline"][i]}
+                       "committed": float(out["committed"][i])}
+            # per-batch/per-tick arrays: present on the legacy path,
+            # replaced by the fixed-size sketch on the reduced path
+            for k in ("timeline", "origin_median_ms", "origin_p99_ms",
+                      "origin_timeline", "origin_lat_ms_timeline"):
+                if k in out:
+                    r[k] = out[k][i]
             if self.protocol == "mandator-sporades":
                 r["async_frac"] = float(out["async_frac"][i])
                 r["views"] = int(out["views"][i])
-                r["cvc_all"] = out["cvc_all"][i]
-                r["commit_key"] = out["commit_key"][i]
+                if "cvc_all" in out:
+                    r["cvc_all"] = out["cvc_all"][i]
+                if "commit_key" in out:
+                    r["commit_key"] = out["commit_key"][i]
             if "inflight_max" in out:
                 r["inflight_max"] = out["inflight_max"][i]
             # flight-recorder outputs (absent at TraceLevel.OFF, so the
@@ -378,6 +448,9 @@ class PendingSweep:
                       "batch_n"):
                 if k in out:
                     r[k] = out[k][i]
+            if "sketch" in out:
+                r["sketch"] = {"v": out["sketch"]["v"][i],
+                               "w": out["sketch"]["w"][i]}
             if "obs" in out:
                 r["obs"] = jax.tree.map(lambda x: x[i], out["obs"])
             # health-monitor outputs (absent at MonitorLevel.OFF)
@@ -389,11 +462,21 @@ class PendingSweep:
 
 
 def dispatch_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec,
-                   canonical: bool = True) -> PendingSweep:
+                   canonical: bool = True, mesh=None) -> PendingSweep:
     """Lower + dispatch the grid without blocking on the device
     computation. ``canonical`` pads the program to the canonical
     signature (see ``_lower``) so shape-compatible sweeps share one
-    compiled program. Analytic baselines (host loops) resolve eagerly."""
+    compiled program. Analytic baselines (host loops) resolve eagerly.
+
+    ``mesh`` selects the mesh-sharded engine: None (default) keeps the
+    legacy per-point dispatch loop; an int or a ``jax.sharding.Mesh``
+    with a ``("grid",)`` axis (see ``repro.distributed.mesh``) shards the
+    flattened grid's leading axis over the mesh devices as ONE dispatch,
+    each device scanning its grid slice with the same canonical
+    single-lane point program and reducing metrics on device to a
+    fixed-size latency sketch (``harness.sim_point(reduced=True)``).
+    Analytic protocols ignore ``mesh`` (host loops have no device
+    program)."""
     wl_names = [wlc.as_workload(w).name for w in spec.workloads]
     if protocol in ANALYTIC_PROTOCOLS:
         if protocol == "epaxos":
@@ -412,10 +495,40 @@ def dispatch_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec,
         raise ValueError(protocol)
 
     compile_cache.ensure()
+    mesh = dmesh.as_grid_mesh(mesh)
     pts, cfg, mode, env_b, wl_b, rate_b, seed_b, sig = _lower(
         cfg, spec, canonical=canonical)
+    # the sharded path registers the SAME canonical signature — the point
+    # computation (and so the persistent-cache key material) is unchanged;
+    # only the orchestration around it is
     _SIGNATURES.setdefault(protocol, set()).add(sig)
     traces_before = _TRACE_COUNTS.get(protocol, 0)
+    if mesh is not None:
+        n_dev = int(mesh.devices.size)
+        _SHARD_SIGNATURES.setdefault(protocol, set()).add((sig, n_dev))
+        pad = (-len(pts)) % n_dev
+        if pad:
+            # pad the grid to a multiple of the mesh size by repeating the
+            # last real point; collect() slices the repeats back off
+            idx = np.concatenate([np.arange(len(pts)),
+                                  np.full(pad, len(pts) - 1)]).astype(np.int64)
+            env_b = jax.tree.map(lambda x: x[idx], env_b)
+            wl_b = jax.tree.map(lambda x: x[idx], wl_b)
+            rate_b, seed_b = rate_b[idx], seed_b[idx]
+        fn = _acquire_sharded(protocol, cfg, mode, mesh)
+        t0 = time.perf_counter()
+        outs = [fn(env_b, wl_b, rate_b, seed_b)]
+        dt = time.perf_counter() - t0
+        stats = _TIMING.setdefault(protocol, {
+            "compile_s": 0.0, "run_s": 0.0, "dispatches": 0, "horizon": 0})
+        bucket = ("compile_s"
+                  if _TRACE_COUNTS.get(protocol, 0) > traces_before
+                  else "run_s")
+        stats[bucket] += dt
+        stats["dispatches"] += 1
+        stats["horizon"] = int(cfg.delay_horizon_ticks)
+        return PendingSweep(protocol, pts=pts, wl_names=wl_names, outs=outs,
+                            n_real=len(pts))
     t0 = time.perf_counter()
     if sig.lanes == len(pts):
         chunks = [(env_b, wl_b, rate_b, seed_b)]
@@ -454,11 +567,13 @@ def dispatch_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec,
 
 
 def run_sweep(protocol: str, cfg: SMRConfig, spec: SweepSpec,
-              canonical: bool = True) -> List[Dict]:
+              canonical: bool = True, mesh=None) -> List[Dict]:
     """Run the whole grid; returns one result dict per point, in
     ``spec.points()`` order. Scan protocols execute as a single vmapped
-    device dispatch; analytic baselines loop on the host."""
-    return dispatch_sweep(protocol, cfg, spec, canonical=canonical).collect()
+    device dispatch; analytic baselines loop on the host. ``mesh``
+    selects the mesh-sharded engine (see ``dispatch_sweep``)."""
+    return dispatch_sweep(protocol, cfg, spec, canonical=canonical,
+                          mesh=mesh).collect()
 
 
 def run_sweeps(requests) -> List[List[Dict]]:

@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.smr import SMRConfig
 from repro.core import channel as ch
 from repro.core import mandator, netsim, paxos, sporades
+from repro.distributed import sketch as dsketch
 from repro.obs import monitor as hmon
 from repro.obs import trace as obs
 from repro.workloads.compile import TRIVIAL_MODE, WorkloadMode
@@ -280,6 +281,33 @@ def _batch_metrics(cfg: SMRConfig, create_t, arr_mean, count, commit_t,
             "origin_lat_ms_timeline": lat_tl_o}
 
 
+# Per-batch / per-tick output arrays whose size scales with the grid's
+# record capacity — the ones the sharded sweep path (experiment.py) trades
+# for the O(SKETCH_BINS) latency sketch so a 10^4-point grid returns
+# O(sketch) bytes per point. Scalar metrics are untouched: ``reduced``
+# mode computes them with the IDENTICAL op sequence (the heavy keys are
+# simply not program outputs, so XLA dead-code-eliminates their compute).
+REDUCED_DROPS = ("timeline", "origin_median_ms", "origin_p99_ms",
+                 "origin_timeline", "origin_lat_ms_timeline",
+                 "cvc_all", "commit_key",
+                 "batch_marks_t", "batch_arr_t", "batch_n")
+
+
+def _latency_sketch(cfg: SMRConfig, create_t, arr_mean, count, commit_t,
+                    warmup_frac=0.15) -> Dict:
+    """Fixed-size on-device digest of the committed-latency distribution,
+    over the same measurement window / weights as ``_batch_metrics``
+    (duplicated ops CSE away under jit)."""
+    n_ticks = netsim.sim_ticks(cfg)
+    ok = jnp.isfinite(commit_t) & (count > 0) & jnp.isfinite(create_t)
+    lat_ms = (commit_t - arr_mean) * cfg.tick_ms
+    in_win = ok & (commit_t >= warmup_frac * n_ticks)
+    w = jnp.where(in_win, count, 0.0).ravel()
+    # zero-weight rows may hold inf/nan latencies (uncommitted batches);
+    # dsketch.build masks them instead of multiplying through
+    return dsketch.build(lat_ms.ravel(), w)
+
+
 def _vc_commit_ticks(cvc_trace: jax.Array, r_max: int) -> jax.Array:
     """cvc_trace: [ticks, n] monotone. Returns [n, r_max] where column r is
     the commit tick of batch (k, r); rounds are 1-based so column 0 is inf,
@@ -298,11 +326,18 @@ def _vc_commit_ticks(cvc_trace: jax.Array, r_max: int) -> jax.Array:
 def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
               rate_per_tick: jax.Array, seed: jax.Array,
               wlt: Dict | None = None,
-              mode: WorkloadMode = TRIVIAL_MODE) -> Dict:
+              mode: WorkloadMode = TRIVIAL_MODE,
+              reduced: bool = False) -> Dict:
     """One grid point, traceable end-to-end: tick scan + on-device metric
     extraction. Returns a dict of arrays (scalars unless noted). ``wlt``
     is the compiled workload table (ignored when mode.trivial); ``mode``
-    is static and must match how wlt was compiled."""
+    is static and must match how wlt was compiled.
+
+    ``reduced`` (static) is the sharded sweep engine's metric contract:
+    scalar metrics keep the exact unreduced op sequence (bitwise-equal
+    values), the per-batch/per-tick arrays in ``REDUCED_DROPS`` are
+    omitted, and a fixed-size latency ``sketch`` is added in their place
+    so each point returns O(SKETCH_BINS) bytes of distribution."""
     n_ticks = netsim.sim_ticks(cfg)
     st, trace = _scan_body(protocol, cfg, n_ticks, rate_per_tick, env, seed,
                            wlt, mode)
@@ -335,6 +370,11 @@ def sim_point(protocol: str, cfg: SMRConfig, env: Dict,
         out["obs"] = {k: v for k, v in rings.items() if v is not None}
     if hmon.on(cfg.monitor_level):
         out["mon"] = hmon.public_view(st["mon"], n_ticks)
+    if reduced:
+        out = {k: v for k, v in out.items() if k not in REDUCED_DROPS}
+        out["sketch"] = _latency_sketch(
+            cfg, wl["batch_create_t"], wl["batch_arr_mean"],
+            wl["batch_count"], commit_t)
     return out
 
 

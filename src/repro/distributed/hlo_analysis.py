@@ -289,6 +289,81 @@ def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
     return module_cost(hlo_text)["collectives"]
 
 
+def opcode_cost(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Loop-aware per-base-opcode {count, bytes} over the whole module —
+    the attribution view of ``module_cost``'s HBM total: which opcode
+    class (e.g. the packed ring's ``dynamic-update-slice`` scatter)
+    carries the traffic. Bytes follow the same boundary model as
+    ``module_cost`` (operands + result per top-level op; in-place slice
+    updates count only the moved slice; fusion internals are free), so
+    the per-opcode bytes sum to the same order as ``module_cost``'s
+    total. Executions multiply by enclosing ``known_trip_count``s."""
+    comps, entry = _parse_module(hlo_text)
+    shapes: Dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            shapes[op.name] = op.shape
+    acc: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str, mult: float) -> None:
+        for op in comps.get(name, ()):
+            oc = op.opcode
+            if oc == "while":
+                trips = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trips = int(tm.group(1))
+                body = _COND_BODY_RE.search(op.line)
+                if body:
+                    walk(body.group(1), mult * trips)
+                continue
+            if oc == "call":
+                tgt = _CALLS_RE.search(op.line)
+                if tgt:
+                    walk(tgt.group(1), mult)
+                continue
+            if oc == "conditional":
+                for blk in re.findall(r"branch_computations=\{([^}]*)\}",
+                                      op.line):
+                    for nm in blk.replace("%", "").split(","):
+                        nm = nm.strip()
+                        if nm:
+                            walk(nm, mult)
+                continue
+            if oc in _FREE_OPS:
+                continue
+            b_res = _shape_bytes(op.shape)
+            op_sizes = [_shape_bytes(shapes[on])
+                        for on in _OPERAND_RE.findall(op.rest)
+                        if on in shapes]
+            is_dus = ("dynamic-update-slice" in op.name
+                      or oc == "dynamic-update-slice")
+            is_ds = (not is_dus and ("dynamic-slice" in op.name
+                                     or oc == "dynamic-slice"))
+            # in-place slice updates keep their identity through fusion
+            # (XLA names the fusion after its root), so classify by the
+            # effective op — the ring scatter stays visible as
+            # dynamic-update-slice instead of vanishing into "fusion"
+            if is_dus:
+                base = "dynamic-update-slice"
+            elif is_ds:
+                base = "dynamic-slice"
+            else:
+                base = _base_opcode(oc)
+            d = acc.setdefault(base, {"count": 0.0, "bytes": 0.0})
+            d["count"] += mult
+            if is_dus and op_sizes:
+                d["bytes"] += 2.0 * (sum(op_sizes) - max(op_sizes)) * mult
+            elif is_ds:
+                d["bytes"] += 2.0 * b_res * mult
+            else:
+                d["bytes"] += (b_res + sum(op_sizes)) * mult
+
+    if entry is not None:
+        walk(entry, 1.0)
+    return acc
+
+
 # ---------------------------------------------------------------------------
 # Program-audit queries (repro.analysis.hlo_lint): dtype census, while
 # topology, host-transfer detection

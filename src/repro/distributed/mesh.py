@@ -1,0 +1,71 @@
+"""Grid-axis device mesh helpers for the mesh-sharded sweep engine.
+
+The sweep engine (core/experiment.py) shards the flattened
+workload x scenario x rate grid over a 1-D ``("grid",)`` mesh: point i
+runs on device i % D, each device executing the same canonical
+CANONICAL_LANES program over its slice, with metrics reduced on device.
+This module owns Mesh construction so experiment code and benchmarks
+share one layout definition.
+
+CPU multi-device testing: set ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+in the environment BEFORE jax initializes its backend (e.g. via a
+subprocess env or the CI job env) and ``jax.devices()`` reports 8 host
+devices; ``grid_mesh()`` then builds an 8-way grid mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh
+
+GRID_AXIS = "grid"
+
+
+def grid_mesh(devices: Union[None, int, Sequence[jax.Device]] = None) -> Mesh:
+    """Build the 1-D ``("grid",)`` mesh.
+
+    ``devices`` may be None (all local devices), an int (first N local
+    devices), or an explicit device sequence.
+    """
+    if devices is None:
+        devs = jax.devices()
+    elif isinstance(devices, int):
+        avail = jax.devices()
+        if devices < 1 or devices > len(avail):
+            raise ValueError(
+                f"grid_mesh: asked for {devices} devices, have {len(avail)}")
+        devs = avail[:devices]
+    else:
+        devs = list(devices)
+    import numpy as np
+    return Mesh(np.array(devs), (GRID_AXIS,))
+
+
+def as_grid_mesh(mesh: Union[None, int, Mesh]) -> Optional[Mesh]:
+    """Normalize a ``mesh=`` argument: None stays None (legacy dispatch),
+    an int becomes an N-device grid mesh, a Mesh must expose the grid axis."""
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mesh):
+        if GRID_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"mesh must have a {GRID_AXIS!r} axis, got {mesh.axis_names}")
+        return mesh
+    return grid_mesh(int(mesh))
+
+
+def device_counts(max_devices: Optional[int] = None) -> Tuple[int, ...]:
+    """Power-of-two device counts available for a scaling curve:
+    (1, 2, 4, ..., D) up to the local device count (or ``max_devices``)."""
+    limit = len(jax.devices())
+    if max_devices is not None:
+        limit = min(limit, max_devices)
+    counts = []
+    d = 1
+    while d <= limit:
+        counts.append(d)
+        d *= 2
+    if counts[-1] != limit:
+        counts.append(limit)
+    return tuple(counts)

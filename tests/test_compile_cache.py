@@ -78,13 +78,55 @@ def test_fig_shaped_sweeps_reuse_one_compiled_program():
     experiment.reset_trace_counts()
     for spec in _fig_specs(cfg.sim_seconds):
         run_sweep("mandator-sporades", cfg, spec)
-    assert experiment.trace_counts()["mandator-sporades"] == 1, \
-        "fig-shaped sweeps must share ONE compiled program"
+    # zero traces means an earlier test already compiled the shared
+    # canonical program — the one-program claim is the signature count
+    traced = experiment.trace_counts().get("mandator-sporades", 0)
+    assert traced <= 1, "fig-shaped sweeps must share ONE compiled program"
     assert len(experiment.program_signatures()["mandator-sporades"]) == 1
     # and a single-point run_sim rides the same program too
     run_sim("mandator-sporades", cfg, 75_000)
-    assert experiment.trace_counts()["mandator-sporades"] == 1
+    assert experiment.trace_counts().get("mandator-sporades", 0) == traced
     assert len(experiment.program_signatures()["mandator-sporades"]) == 1
+
+
+def test_matrix_suite_signature_matches_fig8():
+    """Satellite (warm-cache the robustness suite): the FULL scenario
+    library — whose busiest schedule (gray-wan) needs up to 30 window
+    rows at the 4s suite length — must lower to the SAME canonical
+    signature as the fig8 paper-ddos sweep at both --quick (2s) and full
+    (4s) lengths, so the robustness matrix reuses fig8's compiled program
+    instead of missing the cache on a window-axis variant (the 32-row
+    canonical floor is what absorbs the difference)."""
+    from repro.scenarios import library as scenario_library
+    for sim_s in (2.0, 4.0):
+        cfg = SMRConfig(sim_seconds=sim_s)
+        lib = scenario_library.scenarios(sim_s, cfg.n_replicas)
+        fig8 = _lower(cfg, SweepSpec(rates=(300_000,),
+                                     scenarios=(lib["paper-ddos"],)))[-1]
+        robust = _lower(cfg, SweepSpec(rates=(50_000, 200_000),
+                                       scenarios=tuple(lib.values())))[-1]
+        assert fig8 == robust, (sim_s, fig8, robust)
+
+
+def test_crowded_window_table_shares_canonical_program():
+    """End to end: a 4-interval crash schedule lowers to >8 native window
+    rows; the canonical floor must absorb it so the sweep reuses the
+    baseline-shaped program with ZERO new traces (this is the in-process
+    version of the robustness warm-cache satellite)."""
+    cfg = SMRConfig(sim_seconds=0.5)
+    experiment.reset_trace_counts()
+    run_sweep("mandator", cfg, SweepSpec(rates=(20_000,)))
+    base = experiment.trace_counts().get("mandator", 0)
+    busy = Scenario("many-crashes", tuple(
+        Crash(start_s=0.05 * i, end_s=0.05 * i + 0.02, targets=(i % 5,))
+        for i in range(1, 5)))
+    from repro import scenarios as sc
+    tab = sc.lower(cfg, busy)
+    assert tab["alive"].shape[0] > 8, "scenario must exceed the old floor"
+    run_sweep("mandator", cfg, SweepSpec(rates=(20_000,), scenarios=(busy,)))
+    assert experiment.trace_counts().get("mandator", 0) == base, \
+        "crowded window table must reuse the canonical program"
+    assert len(experiment.program_signatures()["mandator"]) == 1
 
 
 def test_native_lowering_keeps_exact_shapes():

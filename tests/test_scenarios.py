@@ -238,16 +238,20 @@ def test_library_compiles_and_stacks():
 # ------------------------------------------------- batched sweep + trace ----
 
 def test_scenario_grid_is_one_compiled_program():
-    """>=3 scenarios x >=2 rates through run_sweep: one trace, and each
-    point matches its single run_sim bitwise."""
+    """>=3 scenarios x >=2 rates through run_sweep: at most one trace
+    (zero when an earlier test already compiled the shared canonical
+    program — the 32-row window floor makes this grid's signature common
+    property), one distinct signature, and each point matches its single
+    run_sim bitwise."""
     cfg = SMRConfig(sim_seconds=1.0)
     lib = library.scenarios(cfg.sim_seconds, N)
     scens = (lib["baseline"], lib["symmetric-partition"], lib["gray-wan"])
     spec = SweepSpec(rates=(10_000, 30_000), scenarios=scens)
     experiment.reset_trace_counts()
     grid = run_sweep("mandator-sporades", cfg, spec)
-    assert experiment.trace_counts()["mandator-sporades"] == 1, \
+    assert experiment.trace_counts().get("mandator-sporades", 0) <= 1, \
         "a scenario grid must compile as ONE program"
+    assert len(experiment.program_signatures()["mandator-sporades"]) == 1
     assert len(grid) == 6
     for r, (rate, seed, fi, _) in zip(grid, spec.points()):
         single = run_sim("mandator-sporades", cfg, rate_tx_s=rate,

@@ -1,0 +1,270 @@
+"""Mesh-sharded sweep engine (ISSUE 10): the quantile sketch must match
+``harness._weighted_quantile`` (exactly on small inputs, within a pinned
+rank tolerance in general), the sharded dispatch path must be BITWISE
+identical to the legacy per-point loop on a single-device mesh and on an
+8-way forced-host-device mesh (subprocess: XLA_FLAGS must be set before
+jax initializes), obs/monitor outputs must ride inside the sharded
+program, and the benchmarks/run.py merge layer must clamp negative
+cache_saved_s from stale entries."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.smr import SMRConfig
+from repro.core import experiment
+from repro.core.experiment import SweepSpec, dispatch_sweep, run_sweep
+from repro.core.harness import REDUCED_DROPS, _weighted_quantile
+from repro.distributed import mesh as dmesh
+from repro.distributed import sketch
+from repro.scenarios import library as scenario_library
+from repro.workloads import library as workload_library
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+SCALARS = ("throughput", "median_ms", "p99_ms", "committed")
+
+
+def _same(a, b) -> bool:
+    return a == b or (isinstance(a, float) and np.isnan(a) and np.isnan(b))
+
+
+# ------------------------------------------------------- quantile sketch ----
+
+def test_sketch_exact_on_small_inputs():
+    """<= SKETCH_BINS equally-weighted distinct values: every value lands
+    in its own rank bucket, so decode == the exact weighted quantile."""
+    v = jnp.linspace(3.0, 99.0, 60)
+    w = jnp.ones(60)
+    sk = sketch.build(v, w)
+    for q in (0.01, 0.1, 0.5, 0.9, 0.99):
+        exact = float(_weighted_quantile(v, w, q))
+        assert float(sketch.quantile(sk, q)) == exact
+        # host decode must match the device decode bit for bit
+        assert sketch.quantile_np(np.asarray(sk["v"]),
+                                  np.asarray(sk["w"]), q) == exact
+
+
+def test_sketch_rank_tolerance_on_large_weighted_sample():
+    """General case: the decoded quantile's true rank must sit within
+    ~2.5 bucket widths of the requested rank (uniform rank buckets +
+    weighted-mean centers)."""
+    rng = np.random.default_rng(7)
+    v = rng.gamma(2.0, 10.0, size=5000).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, size=5000).astype(np.float32)
+    sk = sketch.build(jnp.asarray(v), jnp.asarray(w))
+    order = np.argsort(v)
+    cv, cdf = v[order], np.cumsum(w[order]) / np.sum(w)
+    for q in (0.1, 0.5, 0.9, 0.99):
+        got = float(sketch.quantile(sk, q))
+        rank = cdf[np.searchsorted(cv, got, side="right") - 1]
+        assert abs(rank - q) <= 2.5 / sketch.SKETCH_BINS, (q, rank)
+
+
+def test_sketch_merge_matches_whole():
+    a = sketch.build(jnp.arange(1.0, 33.0), jnp.ones(32))
+    b = sketch.build(jnp.arange(33.0, 65.0), jnp.ones(32))
+    m = sketch.merge(a, b)
+    allv, allw = jnp.arange(1.0, 65.0), jnp.ones(64)
+    for q in (0.25, 0.5, 0.75, 0.99):
+        assert float(sketch.quantile(m, q)) == \
+            float(_weighted_quantile(allv, allw, q))
+
+
+def test_sketch_edge_cases():
+    # all-zero weight -> NaN, like _weighted_quantile's empty window
+    sk0 = sketch.build(jnp.array([1.0, 2.0]), jnp.zeros(2))
+    assert np.isnan(float(sketch.quantile(sk0, 0.5)))
+    assert np.isnan(sketch.quantile_np(np.asarray(sk0["v"]),
+                                       np.asarray(sk0["w"]), 0.5))
+    # inf values at zero weight (uncommitted batches) are inert
+    ski = sketch.build(jnp.array([5.0, np.inf, np.nan]),
+                       jnp.array([1.0, 0.0, 0.0]))
+    assert float(sketch.quantile(ski, 0.9)) == 5.0
+    for k in ("v", "w"):
+        assert ski[k].dtype == jnp.float32
+        assert ski[k].shape == (sketch.SKETCH_BINS,)
+
+
+# ----------------------------------------------------------- mesh helpers ----
+
+def test_grid_mesh_helpers():
+    m = dmesh.grid_mesh()
+    assert m.axis_names == (dmesh.GRID_AXIS,)
+    assert dmesh.as_grid_mesh(None) is None
+    assert dmesh.as_grid_mesh(m) is m
+    assert dmesh.as_grid_mesh(1).devices.size == 1
+    with pytest.raises(ValueError):
+        dmesh.grid_mesh(len(jax.devices()) + 1)
+    with pytest.raises(ValueError):
+        dmesh.as_grid_mesh(jax.sharding.Mesh(
+            np.array(jax.devices()[:1]), ("other",)))
+    counts = dmesh.device_counts()
+    assert counts[0] == 1 and counts[-1] == len(jax.devices())
+
+
+# ------------------------------------------- sharded == legacy (1 device) ----
+
+def test_sharded_single_device_bitwise_equals_legacy():
+    """The pinned invariant: a 1-device grid mesh produces bitwise the
+    same scalar metrics as the legacy per-point dispatch loop, for both
+    protocol families, with the heavy per-batch arrays replaced by the
+    fixed-size sketch."""
+    cfg = SMRConfig(sim_seconds=0.4)
+    crash = scenario_library.get("leader-crash-recover", cfg.sim_seconds)
+    spec = SweepSpec(rates=(50_000, 150_000), seeds=(0, 1),
+                     scenarios=(None, crash))
+    for proto in ("mandator-sporades", "multipaxos"):
+        legacy = run_sweep(proto, cfg, spec)
+        shard = run_sweep(proto, cfg, spec, mesh=1)
+        assert len(legacy) == len(shard) == spec.size
+        for a, b in zip(legacy, shard):
+            for k in SCALARS:
+                assert _same(a[k], b[k]), (proto, k, a[k], b[k])
+            if proto == "mandator-sporades":
+                assert _same(a["async_frac"], b["async_frac"])
+                assert a["views"] == b["views"]
+            for k in REDUCED_DROPS:
+                assert k not in b, k
+            assert b["sketch"]["v"].shape == (sketch.SKETCH_BINS,)
+            # the on-device sketch decodes to the neighborhood of the
+            # exact on-device quantiles (same window, same weights)
+            if np.isfinite(a["median_ms"]) and a["committed"] > 0:
+                med = sketch.quantile_np(b["sketch"]["v"],
+                                         b["sketch"]["w"], 0.5)
+                assert med == pytest.approx(a["median_ms"], rel=0.1)
+
+
+def test_sharded_closed_loop_and_monitor_ride_along():
+    """Closed-loop feedback (inflight_max) and the health monitor's gauge
+    outputs must survive the reduced/sharded path unchanged."""
+    cfg = SMRConfig(sim_seconds=0.4, monitor_level="gauges")
+    wl = workload_library.get("closed-loop", cfg.sim_seconds)
+    spec = SweepSpec(rates=(50_000,), workloads=(wl,))
+    legacy = run_sweep("mandator", cfg, spec)
+    shard = run_sweep("mandator", cfg, spec, mesh=1)
+    for a, b in zip(legacy, shard):
+        for k in SCALARS:
+            assert _same(a[k], b[k]), (k, a[k], b[k])
+        assert np.array_equal(np.asarray(a["inflight_max"]),
+                              np.asarray(b["inflight_max"]))
+        assert "mon" in b
+        ja, jb = jax.tree.flatten(a["mon"])[0], jax.tree.flatten(b["mon"])[0]
+        for xa, xb in zip(ja, jb):
+            assert np.array_equal(np.asarray(xa), np.asarray(xb),
+                                  equal_nan=True)
+
+
+def test_sharded_registers_canonical_signature_and_traces():
+    """The sharded path must register the SAME canonical ProgramSignature
+    as the legacy path (cache keys unchanged) plus its (sig, devices)
+    pair in shard_signatures(), and re-dispatching must not re-trace."""
+    cfg = SMRConfig(sim_seconds=0.4)
+    spec = SweepSpec(rates=(20_000, 60_000))
+    experiment.reset_trace_counts()
+    run_sweep("mandator", cfg, spec)
+    legacy_sigs = experiment.program_signatures()["mandator"]
+    run_sweep("mandator", cfg, spec, mesh=1)
+    assert experiment.program_signatures()["mandator"] == legacy_sigs
+    shard_sigs = experiment.shard_signatures()["mandator"]
+    assert shard_sigs == ((legacy_sigs[0], 1),)
+    traces = experiment.trace_counts()["mandator"]
+    run_sweep("mandator", cfg, spec, mesh=1)  # memoized program: no trace
+    assert experiment.trace_counts()["mandator"] == traces
+
+
+# --------------------------------- 8-way host-device mesh parity (subproc) ----
+
+_PARITY_SCRIPT = """\
+import json
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.core import compile_cache
+from repro.configs.smr import SMRConfig
+from repro.core.experiment import SweepSpec, run_sweep
+from repro.distributed import mesh as dmesh
+
+compile_cache.enable()
+cfg = SMRConfig(sim_seconds=0.25)
+# 10 points over 8 devices: exercises the pad-to-multiple-of-D path
+spec = SweepSpec(rates=(30e3, 90e3, 150e3, 210e3, 270e3), seeds=(0, 1))
+out = {}
+for proto in ("mandator-sporades", "multipaxos"):
+    legacy = run_sweep(proto, cfg, spec)
+    d1 = run_sweep(proto, cfg, spec, mesh=1)
+    d8 = run_sweep(proto, cfg, spec, mesh=dmesh.grid_mesh(8))
+    rows = []
+    for a, b, c in zip(legacy, d1, d8):
+        row = {}
+        for k in ("throughput", "median_ms", "p99_ms", "committed"):
+            row[k] = [repr(a[k]), repr(b[k]), repr(c[k])]
+        row["sketch_v"] = [repr(b["sketch"]["v"].tolist()),
+                           repr(c["sketch"]["v"].tolist())]
+        row["sketch_w"] = [repr(b["sketch"]["w"].tolist()),
+                           repr(c["sketch"]["w"].tolist())]
+        rows.append(row)
+    out[proto] = rows
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_eight_way_host_device_mesh_bitwise_parity():
+    """Force 8 host devices in a subprocess (XLA_FLAGS must precede jax
+    backend init) and pin: legacy == 1-device mesh == 8-way mesh, bitwise,
+    for both protocol families, on a grid that needs padding (10 over 8).
+    The device-side sketches must match across meshes too."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    out = subprocess.run([sys.executable, "-c", _PARITY_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-4000:]}"
+    res = json.loads(out.stdout)
+    for proto, rows in res.items():
+        assert len(rows) == 10
+        for i, row in enumerate(rows):
+            for k in ("throughput", "median_ms", "p99_ms", "committed"):
+                la, d1, d8 = row[k]
+                assert la == d1 == d8, (proto, i, k, row[k])
+            assert row["sketch_v"][0] == row["sketch_v"][1], (proto, i)
+            assert row["sketch_w"][0] == row["sketch_w"][1], (proto, i)
+
+
+# ------------------------------------------------ bench merge-layer clamp ----
+
+def test_bench_merge_layer_clamps_negative_cache_saved():
+    """Satellite: BENCH_core.json entries written by older revisions can
+    carry negative cache_saved_s; the benchmarks/run.py merge layer must
+    clamp BOTH the stale previous entries and this run's entries."""
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks.run import merge_suites, sanitize_entry
+    finally:
+        sys.path.pop(0)
+    stale = {"suites": {
+        "channel": {"wall_s": 5.0, "cache_saved_s": -0.126},
+        "kernels": {"wall_s": 4.0, "cache_saved_s": -0.025},
+        "fig6": {"wall_s": 7.0, "cache_saved_s": 4.424},
+        "weird": {"wall_s": 1.0, "cache_saved_s": "n/a"},
+    }}
+    current = {"channel": {"wall_s": 5.5, "cache_saved_s": -0.5},
+               "scaling": {"wall_s": 9.0, "cache_saved_s": 1.25}}
+    merged = merge_suites(stale, current)
+    assert merged["channel"]["cache_saved_s"] == 0.0      # current wins
+    assert merged["channel"]["wall_s"] == 5.5
+    assert merged["kernels"]["cache_saved_s"] == 0.0      # stale clamped
+    assert merged["fig6"]["cache_saved_s"] == 4.424       # positives kept
+    assert merged["scaling"]["cache_saved_s"] == 1.25
+    assert merged["weird"]["cache_saved_s"] == "n/a"      # unparsable kept
+    assert sanitize_entry({"cache_saved_s": -3})["cache_saved_s"] == 0.0
+    assert sanitize_entry({"x": 1}) == {"x": 1}

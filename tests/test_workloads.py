@@ -201,8 +201,11 @@ def test_workload_grid_is_one_compiled_program_and_matches_sequential():
                      workloads=wls)
     experiment.reset_trace_counts()
     grid = run_sweep("mandator-sporades", cfg, spec)
-    assert experiment.trace_counts()["mandator-sporades"] == 1, \
+    # zero traces means an earlier test already compiled the shared
+    # canonical program — the one-program claim is the signature count
+    assert experiment.trace_counts().get("mandator-sporades", 0) <= 1, \
         "a workload × scenario × rate grid must compile as ONE program"
+    assert len(experiment.program_signatures()["mandator-sporades"]) == 1
     assert len(grid) == spec.size == 12
     for r, (rate, seed, fi, wi) in zip(grid, spec.points()):
         single = run_sim("mandator-sporades", cfg, rate_tx_s=rate,
